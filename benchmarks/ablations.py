@@ -1,0 +1,54 @@
+"""Ablations of MEMHD's §III-B/C design choices (beyond the paper's own
+figures, but directly about its method):
+
+  * step-4 normalization: l2-equalization vs none
+  * Eq.-6 update payload: encoded FP hypervector vs binarized query
+  * binarization threshold: global mean (paper) vs per-centroid mean
+  * allocation: confusion-driven (paper) vs R=1.0 (no allocation loop)
+
+Each ablation flips exactly one knob from the reference configuration.
+"""
+import time
+
+import jax
+
+from benchmarks.common import dataset, row, section
+from repro.core import EncoderConfig, MemhdConfig, MemhdModel
+
+REF = dict(dim=256, columns=128, epochs=8, kmeans_iters=8, lr=0.015,
+           init_ratio=0.8, update_with="encoded", normalize="l2",
+           threshold="mean")
+
+ABLATIONS = {
+    "reference": {},
+    "no_normalization": {"normalize": "none"},
+    "binary_updates": {"update_with": "binary"},
+    "per_centroid_threshold": {"threshold": "per_centroid"},
+    "no_allocation_loop_R1": {"init_ratio": 1.0},
+}
+
+
+def main() -> None:
+    for name in ("mnist", "isolet"):
+        ds = dataset(name)
+        section(f"Ablations ({name})")
+        accs = {}
+        for tag, overrides in ABLATIONS.items():
+            kw = dict(REF, classes=ds.classes, **overrides)
+            enc = EncoderConfig(kind="projection", features=ds.features,
+                                dim=kw["dim"])
+            amc = MemhdConfig(**kw)
+            m = MemhdModel.create(jax.random.key(0), enc, amc)
+            t0 = time.perf_counter()
+            m, _ = m.fit(jax.random.key(1), ds.train_x, ds.train_y)
+            us = (time.perf_counter() - t0) * 1e6
+            accs[tag] = m.score(ds.test_x, ds.test_y)
+            row(f"ablation/{name}/{tag}", us, f"acc={accs[tag]:.4f}")
+        for tag in ABLATIONS:
+            if tag != "reference":
+                row(f"ablation/{name}/{tag}_delta", 0.0,
+                    f"{accs[tag] - accs['reference']:+.4f}")
+
+
+if __name__ == "__main__":
+    main()

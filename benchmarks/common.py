@@ -1,0 +1,54 @@
+"""Shared benchmark utilities: timing, dataset cache, CSV emission.
+
+Every benchmark prints rows ``name,us_per_call,derived`` (derived =
+the figure/table quantity being reproduced: accuracy, ratio, cycles...).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable, Dict
+
+import jax
+
+_DATA_CACHE: Dict[str, object] = {}
+
+# Budget knobs: small enough for the 1-core CPU container, large enough
+# that the paper's orderings are visible. Real-data runs would lift these.
+TRAIN_PER_CLASS = {"mnist": 300, "fmnist": 300, "isolet": 120}
+TEST_PER_CLASS = {"mnist": 60, "fmnist": 60, "isolet": 40}
+EPOCHS = 8
+
+
+def dataset(name: str):
+    if name not in _DATA_CACHE:
+        from repro.data import load_dataset
+        _DATA_CACHE[name] = load_dataset(
+            name, train_per_class=TRAIN_PER_CLASS[name],
+            test_per_class=TEST_PER_CLASS[name])
+    return _DATA_CACHE[name]
+
+
+def time_fn(fn: Callable, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Median wall-time per call in microseconds (blocks on jax arrays)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def row(name: str, us_per_call: float, derived) -> str:
+    line = f"{name},{us_per_call:.1f},{derived}"
+    print(line, flush=True)
+    return line
+
+
+def section(title: str):
+    print(f"\n# === {title} ===", flush=True)

@@ -1,0 +1,46 @@
+"""Fig. 4: accuracy heatmap over (dimension x memory columns).
+
+Reduced grid {64,128,256} x {32,64,128,256} (the paper sweeps 64..1024);
+the qualitative findings under test: accuracy rises with D, rises with C
+for the many-samples datasets (mnist/fmnist) and peaks at moderate C for
+ISOLET (few samples/class -> too many columns overfit)."""
+import time
+
+import jax
+
+from benchmarks.common import dataset, row, section
+from repro.core import EncoderConfig, MemhdConfig, MemhdModel
+
+DIMS = (64, 128, 256)
+COLS = (32, 64, 128, 256)
+
+
+def main() -> None:
+    for name in ("mnist", "isolet"):
+        ds = dataset(name)
+        section(f"Fig. 4 heatmap ({name})")
+        grid = {}
+        for d in DIMS:
+            for c in COLS:
+                if c < ds.classes:
+                    continue
+                enc = EncoderConfig(kind="projection",
+                                    features=ds.features, dim=d)
+                amc = MemhdConfig(dim=d, columns=c, classes=ds.classes,
+                                  epochs=5, kmeans_iters=6, lr=0.015)
+                m = MemhdModel.create(jax.random.key(0), enc, amc)
+                t0 = time.perf_counter()
+                m, _ = m.fit(jax.random.key(1), ds.train_x, ds.train_y)
+                us = (time.perf_counter() - t0) * 1e6
+                acc = m.score(ds.test_x, ds.test_y)
+                grid[(d, c)] = acc
+                row(f"fig4/{name}/D{d}xC{c}", us, f"acc={acc:.4f}")
+        # Derived: higher D helps at fixed C (paper's main diagonal).
+        for c in COLS:
+            if (DIMS[0], c) in grid and (DIMS[-1], c) in grid:
+                row(f"fig4/{name}/dim_gain_C{c}", 0.0,
+                    f"{grid[(DIMS[-1], c)] - grid[(DIMS[0], c)]:+.4f}")
+
+
+if __name__ == "__main__":
+    main()

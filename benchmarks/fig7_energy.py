@@ -1,0 +1,46 @@
+"""Fig. 7: normalized AM energy and cycles across baseline models.
+
+Energy ~ sequential array passes (NeuroSim-calibrated constants in
+ImcArrayConfig); reproduces the paper's headline ratios: MEMHD 80x more
+efficient than BasicHDC(10240D), 4x more than LeHDC(400D), and
+"partitioning keeps energy constant"."""
+from benchmarks.common import row, section
+from repro.core.imc import ImcArrayConfig, map_basic, map_memhd, \
+    map_partitioned
+
+# Fig. 7 model zoo: equal-accuracy operating points from the paper.
+MODELS = {
+    "basichdc_10240d": (10240, 10),
+    "searchd_8000d": (8000, 640),    # k x N = 10 x 64 binary vectors
+    "quanthd_1600d": (1600, 10),
+    "lehdc_400d": (400, 10),
+}
+MEMHD = (128, 128)
+
+
+def main() -> None:
+    section("Fig. 7: normalized AM energy & cycles (128x128 arrays)")
+    arr = ImcArrayConfig()
+    memhd = map_memhd(*MEMHD, arr)
+    row("fig7/memhd_128x128/cycles", 0.0, memhd.cycles)
+    row("fig7/memhd_128x128/energy_pj", 0.0, f"{memhd.energy_pj(arr):.1f}")
+    for name, (d, cols) in MODELS.items():
+        c = map_basic(d, cols, arr)
+        ratio = c.energy_pj(arr) / memhd.energy_pj(arr)
+        row(f"fig7/{name}/cycles", 0.0, c.cycles)
+        row(f"fig7/{name}/arrays", 0.0, c.arrays)
+        row(f"fig7/{name}/energy_vs_memhd", 0.0, f"{ratio:.1f}x")
+    # Partitioning invariance (the Fig. 7 plateau):
+    e0 = map_basic(10240, 10, arr).energy_pj(arr)
+    for p in (5, 10):
+        ep = map_partitioned(10240, 10, p, arr).energy_pj(arr)
+        row(f"fig7/partition_p{p}/energy_ratio_vs_basic", 0.0,
+            f"{ep / e0:.3f}")
+    assert map_basic(10240, 10, arr).energy_pj(arr) \
+        / memhd.energy_pj(arr) == 80.0
+    assert map_basic(400, 10, arr).energy_pj(arr) \
+        / memhd.energy_pj(arr) == 4.0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Kernel microbenchmarks + IMC-geometry consistency.
+
+Wall-clock on CPU times the *oracle* (jit'd jnp) path — Pallas interpret
+mode executes the kernel body in Python and is a correctness tool, not a
+throughput proxy. The structural quantity that carries to TPU is the
+kernel grid (== IMC array cycles), asserted here against the cost model
+for every paper geometry.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, section, time_fn
+from repro.core.imc import ImcArrayConfig, map_basic, map_memhd
+from repro.kernels import ops, ref
+from repro.kernels.am_search import imc_cycles_for as search_cycles
+from repro.kernels.binary_mvm import imc_cycles_for as mvm_cycles
+
+GEOMS = [(128, 128), (256, 256), (512, 128), (1024, 1024)]
+
+
+def main() -> None:
+    section("Kernel bench: associative search + encoding")
+    rng = np.random.default_rng(0)
+    arr = ImcArrayConfig()
+    for d, c in GEOMS:
+        q = jnp.asarray(rng.choice([-1., 1.], size=(256, d))
+                        .astype(np.float32))
+        am = jnp.asarray(rng.choice([-1., 1.], size=(c, d))
+                         .astype(np.float32))
+        amt = am.T
+
+        search_ref = jax.jit(lambda qq, aa: ref.am_search(qq, aa))
+        us = time_fn(search_ref, q, amt, iters=5)
+        grid = search_cycles((d, c))
+        model = map_memhd(d, c, arr).cycles
+        row(f"kernel/am_search_{d}x{c}", us,
+            f"grid_steps={grid};imc_cycles={model}")
+        assert grid == model
+
+        # Spot correctness of the Pallas kernel (interpret mode).
+        gi, gs = ops.am_search(q[:8], am)
+        wi, ws = ref.am_search(q[:8], amt)
+        np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+    section("Kernel bench: projection encoding (EM)")
+    for f, d in ((784, 128), (784, 1024), (617, 512)):
+        x = jnp.asarray(rng.normal(size=(256, f)).astype(np.float32))
+        w = jnp.asarray(rng.choice([-1., 1.], size=(f, d))
+                        .astype(np.float32))
+        mvm_ref = jax.jit(lambda xx, ww: ref.binary_mvm(xx, ww))
+        us = time_fn(mvm_ref, x, w, iters=5)
+        grid = mvm_cycles((256, f), (f, d))
+        model = map_basic(f, d, arr).cycles
+        row(f"kernel/encode_mvm_{f}x{d}", us,
+            f"grid_steps={grid};imc_cycles={model}")
+        assert grid == model
+
+    section("Kernel bench: 1-bit pack/unpack")
+    x = jnp.asarray(rng.choice([-1., 1.], size=(1024, 1024))
+                    .astype(np.float32))
+    pack_ref = jax.jit(ref.pack_bits)
+    us = time_fn(pack_ref, x, iters=5)
+    p = ops.pack_bits(x)
+    row("kernel/pack_bits_1024x1024", us,
+        f"bytes={p.size};ratio={x.size * 4 / p.size:.0f}x")
+
+
+if __name__ == "__main__":
+    main()

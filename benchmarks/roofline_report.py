@@ -1,0 +1,80 @@
+"""Roofline table from the dry-run artifacts (reports/dryrun/*.json).
+
+Prints per-cell terms (compute / memory / collective, seconds), the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and ranks hillclimb
+candidates: worst roofline fraction, most collective-bound, and the MoE
+flagship. Also emits the EXPERIMENTS.md §Roofline markdown table to
+reports/roofline_table.md.
+"""
+import glob
+import json
+import os
+
+from benchmarks.common import row, section
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports",
+                          "dryrun")
+
+
+def load_reports(mesh: str = "16x16"):
+    out = []
+    for fn in sorted(glob.glob(os.path.join(REPORT_DIR, "*.json"))):
+        if "__" + mesh + ".json" not in fn:
+            continue
+        with open(fn) as f:
+            rep = json.load(f)
+        if rep.get("status") == "ok" and not rep.get("overrides"):
+            out.append(rep)
+    return out
+
+
+def main() -> None:
+    section("Roofline: single-pod (16x16) baselines from dry-run")
+    reps = load_reports("16x16")
+    if not reps:
+        row("roofline/no_reports_found", 0.0,
+            "run: python -m repro.launch.dryrun --all --mesh both")
+        return
+
+    lines = ["| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | "
+             "dominant | useful | MFU-bound | fits 16GB |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for rep in reps:
+        r = rep["roofline"]
+        name = f"{rep['arch']}/{rep['shape']}"
+        row(f"roofline/{name}/terms", 0.0,
+            f"comp={r['t_compute']:.4g};mem={r['t_memory']:.4g};"
+            f"coll={r['t_collective']:.4g};dom={r['dominant']}")
+        row(f"roofline/{name}/useful_flops_ratio", 0.0,
+            f"{r['useful_flops_ratio']:.3f}")
+        row(f"roofline/{name}/mfu_bound", 0.0, f"{r['mfu_bound']:.4f}")
+        lines.append(
+            f"| {rep['arch']} | {rep['shape']} | {r['t_compute']:.4g} | "
+            f"{r['t_memory']:.4g} | {r['t_collective']:.4g} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['mfu_bound']:.4f} | "
+            f"{rep.get('memory', {}).get('fits_16GB', 'n/a')} |")
+
+    out_md = os.path.join(REPORT_DIR, "..", "roofline_table.md")
+    with open(out_md, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    row("roofline/table_written", 0.0, os.path.abspath(out_md))
+
+    # Hillclimb candidate ranking.
+    train_reps = [x for x in reps if x.get("step") == "train"]
+    if train_reps:
+        worst = min(train_reps, key=lambda x: x["roofline"]["mfu_bound"])
+        row("roofline/worst_mfu_bound", 0.0,
+            f"{worst['arch']}/{worst['shape']}="
+            f"{worst['roofline']['mfu_bound']:.4f}")
+    coll = [x for x in reps if x["roofline"]["dominant"] == "collective"]
+    if coll:
+        most_coll = max(coll,
+                        key=lambda x: x["roofline"]["t_collective"])
+        row("roofline/most_collective_bound", 0.0,
+            f"{most_coll['arch']}/{most_coll['shape']}="
+            f"{most_coll['roofline']['t_collective']:.3g}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per benchmark. Use
+``--only fig3`` (prefix match) to run a subset; ``--fast`` skips the
+accuracy sweeps (minutes) and runs the closed-form + kernel benches.
+"""
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = [
+    ("table2", "benchmarks.table2_imc_mapping"),
+    ("fig7", "benchmarks.fig7_energy"),
+    ("kernel", "benchmarks.kernel_bench"),
+    ("fig3", "benchmarks.fig3_accuracy_memory"),
+    ("fig4", "benchmarks.fig4_heatmap"),
+    ("fig5", "benchmarks.fig5_init"),
+    ("fig6", "benchmarks.fig6_r_sweep"),
+    ("ablation", "benchmarks.ablations"),
+    ("roofline", "benchmarks.roofline_report"),
+]
+FAST = {"table2", "fig7", "kernel", "roofline"}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name, module in BENCHES:
+        if args.only and not name.startswith(args.only):
+            continue
+        if args.fast and name not in FAST:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(module, fromlist=["main"])
+            mod.main()
+            print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        except Exception:  # noqa: BLE001 — keep the suite running
+            failures.append(name)
+            print(f"# {name} FAILED:\n{traceback.format_exc()}",
+                  file=sys.stderr, flush=True)
+    if failures:
+        print(f"# FAILED benches: {failures}", file=sys.stderr)
+        sys.exit(1)
+    print("# all benches passed")
+
+
+if __name__ == "__main__":
+    main()

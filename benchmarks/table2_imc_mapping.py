@@ -1,0 +1,34 @@
+"""Table II: computation cycles, arrays, AM utilization on 128x128 arrays.
+
+Closed-form from the IMC mapping model; asserted against the paper's
+numbers (80x / 71x / 20x / 17.5x / 100%)."""
+from benchmarks.common import row, section
+from repro.core.imc import ImcArrayConfig, table2
+
+
+def main() -> None:
+    section("Table II: IMC mapping (128x128 array)")
+    t = table2(ImcArrayConfig())
+    for group, methods in t.items():
+        for name, cost in methods.items():
+            row(f"table2/{group}/{name}/cycles", 0.0, cost.total_cycles)
+            row(f"table2/{group}/{name}/arrays", 0.0, cost.total_arrays)
+            row(f"table2/{group}/{name}/am_util", 0.0,
+                f"{cost.am.utilization:.4f}")
+
+    a = t["mnist_fmnist"]
+    b = t["isolet"]
+    row("table2/mnist/cycle_improvement_vs_basic", 0.0,
+        a["basic"].total_cycles / a["memhd"].total_cycles)      # 80x
+    row("table2/mnist/array_improvement_vs_p10", 0.0,
+        a["partition_p10"].total_arrays // a["memhd"].total_arrays)  # 71x
+    row("table2/isolet/cycle_improvement_vs_basic", 0.0,
+        b["basic"].total_cycles / b["memhd"].total_cycles)      # 20x
+    row("table2/isolet/array_improvement_vs_p4", 0.0,
+        b["partition_p4"].total_arrays / b["memhd"].total_arrays)  # 17.5x
+    assert a["basic"].total_cycles / a["memhd"].total_cycles == 80.0
+    assert b["basic"].total_cycles / b["memhd"].total_cycles == 20.0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""End-to-end LM training driver (deliverable (b): ~100M for a few
+hundred steps).
+
+Trains the *full* mamba2-130m config (or any --arch, or a --preset small
+model for quick CPU runs) on the synthetic Zipf+motif stream with the
+production substrate: AdamW + cosine schedule, atomic checkpoints,
+auto-resume, watchdog. Loss dropping over a few hundred steps is the
+acceptance signal (recorded in EXPERIMENTS.md).
+
+  PYTHONPATH=src python examples/train_lm.py --preset small --steps 300
+  PYTHONPATH=src python examples/train_lm.py --arch mamba2-130m --steps 200
+"""
+import argparse
+import logging
+
+from repro.launch.train import TrainRunConfig, run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m")
+    ap.add_argument("--preset", choices=["full", "small", "smoke"],
+                    default="small")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(message)s")
+
+    cfg = TrainRunConfig(
+        arch=args.arch,
+        smoke=args.preset in ("small", "smoke"),
+        steps=args.steps,
+        seq_len=args.seq_len,
+        global_batch=args.batch,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=max(20, args.steps // 5),
+    )
+    out = run(cfg)
+    drop = (out["first_loss"] or 0) - (out["last_loss"] or 0)
+    print(f"\nloss {out['first_loss']:.3f} -> {out['last_loss']:.3f} "
+          f"(drop {drop:+.3f}) over {out['steps_run']} steps")
+    assert drop > 0, "loss did not decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,212 @@
+"""Fault-tolerant checkpointing: atomic, content-verified, mesh-agnostic.
+
+Design goals (the 1000-node story):
+
+* **Atomicity** — a checkpoint is written into ``step_<N>.tmp/`` and
+  renamed to ``step_<N>/`` only after every shard file and the manifest
+  hash are on disk. A crash mid-write leaves a ``.tmp`` directory that
+  restore ignores and the next save garbage-collects.
+* **Verification** — the manifest records a per-file SHA-256; restore
+  validates before deserializing, so a torn file is detected, the
+  checkpoint skipped, and the previous one used (tested by corrupting a
+  file on purpose).
+* **Mesh-agnostic layout** — arrays are saved as *logical* (unsharded)
+  arrays keyed by pytree path. Restore applies whatever shardings the
+  *current* mesh prescribes — this is what makes elastic rescale (512 ->
+  256 chips, or 8 -> 4 in tests) a no-op at the checkpoint layer. For
+  true 1000-node scale the same manifest format extends to per-shard
+  files (key + shard index); the single-host container writes one file
+  per leaf.
+* **Keep-k** — old steps are pruned, newest first, never the one being
+  written; a ``latest`` symlink is refreshed atomically.
+* **Iterator state** — the data-pipeline position (and any JSON-able
+  extra state) rides in the manifest so resume is bit-exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import logging
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+log = logging.getLogger(__name__)
+
+PyTree = Any
+
+_MANIFEST = "manifest.json"
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointConfig:
+    directory: str
+    keep: int = 3
+    async_write: bool = False  # reserved; single-host writes are fast
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+def _sha256(fn: str) -> str:
+    h = hashlib.sha256()
+    with open(fn, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+class CheckpointManager:
+    """Save/restore pytrees of jax or numpy arrays, atomically."""
+
+    def __init__(self, cfg: CheckpointConfig):
+        self.cfg = cfg
+        os.makedirs(cfg.directory, exist_ok=True)
+
+    # -- paths ---------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.cfg.directory, f"step_{step:010d}")
+
+    def all_steps(self) -> list[int]:
+        steps = []
+        for name in os.listdir(self.cfg.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    steps.append(int(name[len("step_"):]))
+                except ValueError:
+                    continue
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # -- save ------------------------------------------------------------------
+    def save(self, step: int, tree: PyTree,
+             extra: Optional[Dict[str, Any]] = None) -> str:
+        """Write checkpoint for ``step``; returns the final directory."""
+        final = self._step_dir(step)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+
+        leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+        files = {}
+        for path, leaf in leaves_with_paths:
+            key = _path_str(path)
+            arr = np.asarray(jax.device_get(leaf))
+            fn = hashlib.md5(key.encode()).hexdigest()[:16] + ".npy"
+            np.save(os.path.join(tmp, fn), arr, allow_pickle=False)
+            files[key] = {
+                "file": fn,
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "sha256": _sha256(os.path.join(tmp, fn)),
+            }
+
+        manifest = {
+            "step": step,
+            "files": files,
+            "extra": extra or {},
+            "format_version": 1,
+        }
+        with open(os.path.join(tmp, _MANIFEST), "w") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)  # atomic on POSIX
+        self._update_latest_link(final)
+        self._prune()
+        log.info("saved checkpoint step=%d -> %s (%d leaves)",
+                 step, final, len(files))
+        return final
+
+    def _update_latest_link(self, final: str):
+        link = os.path.join(self.cfg.directory, "latest")
+        tmp_link = link + ".tmp"
+        try:
+            if os.path.lexists(tmp_link):
+                os.remove(tmp_link)
+            os.symlink(os.path.basename(final), tmp_link)
+            os.replace(tmp_link, link)
+        except OSError:  # filesystems without symlinks: plain file
+            with open(link, "w") as f:
+                f.write(os.path.basename(final))
+
+    def _prune(self):
+        steps = self.all_steps()
+        for step in steps[: -self.cfg.keep]:
+            shutil.rmtree(self._step_dir(step), ignore_errors=True)
+        # GC stray tmp dirs from crashed writers.
+        for name in os.listdir(self.cfg.directory):
+            if name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.cfg.directory, name),
+                              ignore_errors=True)
+
+    # -- restore -------------------------------------------------------------
+    def _verify(self, d: str, manifest: Dict) -> bool:
+        for key, meta in manifest["files"].items():
+            fn = os.path.join(d, meta["file"])
+            if not os.path.exists(fn) or _sha256(fn) != meta["sha256"]:
+                log.warning("checkpoint %s: corrupt leaf %r", d, key)
+                return False
+        return True
+
+    def restore(self, tree_like: PyTree, step: Optional[int] = None,
+                ) -> Tuple[Optional[int], PyTree, Dict[str, Any]]:
+        """Restore into the structure of ``tree_like``.
+
+        Walks checkpoints newest-first until one verifies. Returns
+        (step, tree, extra); (None, tree_like, {}) if nothing usable.
+        Restored leaves are plain numpy — callers ``jax.device_put`` them
+        with the current mesh's shardings (elastic rescale happens there).
+        """
+        candidates = ([step] if step is not None
+                      else list(reversed(self.all_steps())))
+        for s in candidates:
+            d = self._step_dir(s)
+            mf = os.path.join(d, _MANIFEST)
+            if not os.path.exists(mf):
+                continue
+            with open(mf) as f:
+                manifest = json.load(f)
+            if not self._verify(d, manifest):
+                continue
+            leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(
+                tree_like)
+            out = []
+            ok = True
+            for path, like in leaves_with_paths:
+                key = _path_str(path)
+                meta = manifest["files"].get(key)
+                if meta is None:
+                    log.warning("checkpoint %s: missing key %r", d, key)
+                    ok = False
+                    break
+                arr = np.load(os.path.join(d, meta["file"]),
+                              allow_pickle=False)
+                out.append(arr)
+            if not ok:
+                continue
+            tree = jax.tree_util.tree_unflatten(treedef, out)
+            log.info("restored checkpoint step=%d from %s", s, d)
+            return s, tree, manifest.get("extra", {})
+        return None, tree_like, {}

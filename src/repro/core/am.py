@@ -1,0 +1,117 @@
+"""Multi-centroid associative memory (AM) — the paper's core data structure.
+
+The AM is a (C, D) matrix of centroids plus a (C,) ownership vector mapping
+each centroid (column of the IMC array) to its class. Two copies coexist
+during training, exactly as in §III-B/C:
+
+* ``fp``   — the float "shadow" AM that iterative learning updates, and
+* ``binary`` — its 1-bit quantization (mean threshold), which is what the
+  similarity evaluation (and the deployed IMC array / Pallas kernel) uses.
+
+State is a plain dict pytree so it flows through jit/pjit and the
+checkpointing substrate unchanged.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+AmState = Dict[str, Array]
+
+
+# ---------------------------------------------------------------------------
+# Quantization (§III-B)
+# ---------------------------------------------------------------------------
+
+def binarize_am(fp_am: Array, threshold: str = "mean") -> Array:
+    """1-bit quantization of the float AM.
+
+    The paper binarizes with the *mean* of the (near-Gaussian) value
+    distribution as the threshold: values > mu -> 1, else 0. We store the
+    result bipolar (+-1) because +-1 operands are MXU-native and dot-sim
+    rankings over {0,1} vs {-1,+1} encodings are affinely related (see
+    tests/test_properties.py::test_bipolar_rank_equivalence).
+
+    Args:
+      fp_am: (C, D) float AM.
+      threshold: "mean" (global mean, the paper's choice) or
+        "per_centroid" (row-wise mean).
+
+    Returns:
+      (C, D) bipolar binary AM, same dtype as input.
+    """
+    if threshold == "mean":
+        mu = jnp.mean(fp_am)
+    elif threshold == "per_centroid":
+        mu = jnp.mean(fp_am, axis=-1, keepdims=True)
+    else:
+        raise ValueError(f"bad threshold: {threshold!r}")
+    return jnp.where(fp_am > mu, 1.0, -1.0).astype(fp_am.dtype)
+
+
+def to_unipolar(binary_am: Array) -> Array:
+    """{-1,+1} -> {0,1}: the bit pattern actually written to IMC cells."""
+    return (binary_am > 0).astype(jnp.uint8)
+
+
+def from_unipolar(bits: Array, dtype=jnp.float32) -> Array:
+    """{0,1} -> {-1,+1}."""
+    return (bits.astype(dtype) * 2.0 - 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Associative search (§II-D, §III-D)
+# ---------------------------------------------------------------------------
+
+def similarities(binary_am: Array, queries: Array) -> Array:
+    """Dot similarity of queries against every centroid.
+
+    queries: (..., D), binary_am: (C, D)  ->  (..., C).
+    This is the MVM the IMC array / the am_search Pallas kernel performs.
+    """
+    return jnp.einsum("...d,cd->...c", queries, binary_am)
+
+
+def predict_from_sims(sims: Array, centroid_class: Array) -> Array:
+    """pred = class owning the argmax-similarity centroid (Eq. after §III-D)."""
+    best = jnp.argmax(sims, axis=-1)
+    return centroid_class[best]
+
+
+def predict(binary_am: Array, centroid_class: Array, queries: Array) -> Array:
+    return predict_from_sims(similarities(binary_am, queries), centroid_class)
+
+
+def class_max_sims(sims: Array, centroid_class: Array, n_classes: int,
+                   ) -> Array:
+    """Max similarity per class: (..., C) -> (..., k).
+
+    Used by Eq. (5) (true-class target selection) and by evaluation.
+    Implemented with a one-hot masked max so it stays jittable for any
+    centroid->class ownership pattern.
+    """
+    neg = jnp.finfo(sims.dtype).min
+    onehot = jax.nn.one_hot(centroid_class, n_classes).astype(bool)  # (C, k)
+    masked = jnp.where(onehot, sims[..., :, None], neg)  # (..., C, k)
+    return jnp.max(masked, axis=-2)
+
+
+# ---------------------------------------------------------------------------
+# AM state constructors
+# ---------------------------------------------------------------------------
+
+def make_am_state(fp_am: Array, centroid_class: Array,
+                  threshold: str = "mean") -> AmState:
+    fp_am = fp_am.astype(jnp.float32)
+    return {
+        "fp": fp_am,
+        "binary": binarize_am(fp_am, threshold),
+        "centroid_class": centroid_class.astype(jnp.int32),
+    }
+
+
+def refresh_binary(state: AmState, threshold: str = "mean") -> AmState:
+    return dict(state, binary=binarize_am(state["fp"], threshold))

@@ -1,0 +1,204 @@
+"""Binary-HDC baselines of Table I: BasicHDC, QuantHD, LeHDC, SearcHD.
+
+Each baseline is a small class with the same fit/score surface as
+``MemhdModel`` so the Fig.-3/7 benchmarks can sweep them uniformly.
+
+* **BasicHDC** — projection encoding, single-pass AM (class vector = sum
+  of its samples' hypervectors), binarized. Directly MVM/IMC-compatible,
+  which is why the paper's Table II compares against it.
+* **QuantHD** [13] — ID-level encoding, single class vector per class,
+  quantization-aware iterative learning: similarity on the binary AM,
+  Eq.-(2) updates on the float AM, re-binarize each epoch.
+* **LeHDC** [15] — ID-level encoding, BNN-style training: logits are
+  dot-similarities of the *sign-binarized* class vectors (straight-through
+  estimator), softmax cross-entropy, SGD with momentum on float weights.
+* **SearcHD** [14] — ID-level encoding, multi-model N-vector stochastic
+  quantization: per class, N binary vectors sampled from the accumulated
+  class vector's per-dimension firing probability; inference = argmax over
+  all k*N binary vectors.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoding
+from repro.core.types import BaselineConfig, EncoderConfig
+
+Array = jax.Array
+
+
+def _sign(x: Array) -> Array:
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def _encoder_cfg(cfg: BaselineConfig, features: int) -> EncoderConfig:
+    kind = "projection" if cfg.kind == "basic" else "id_level"
+    return EncoderConfig(kind=kind, features=features, dim=cfg.dim)
+
+
+@dataclasses.dataclass
+class BaselineModel:
+    """Uniform container: binary AM of shape (M, D) + owner classes (M,)."""
+
+    cfg: BaselineConfig
+    enc_cfg: EncoderConfig
+    enc_params: Dict[str, Array]
+    am: Array                # (M, D) bipolar
+    owners: Array            # (M,) int32
+
+    def encode_query(self, feats: Array) -> Array:
+        return encoding.encode_query(self.enc_params, self.enc_cfg, feats)
+
+    def predict(self, feats: Array) -> Array:
+        q = self.encode_query(feats)
+        sims = jnp.einsum("...d,md->...m", q, self.am)
+        return self.owners[jnp.argmax(sims, axis=-1)]
+
+    def score(self, feats: Array, labels: Array, batch: int = 2048) -> float:
+        n, correct = feats.shape[0], 0
+        for b in range(0, n, batch):
+            pred = self.predict(feats[b:b + batch])
+            correct += int(jnp.sum(pred == labels[b:b + batch]))
+        return correct / n
+
+    @property
+    def memory_bits(self) -> int:
+        return self.enc_cfg.memory_bits + self.cfg.am_memory_bits()
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers
+# ---------------------------------------------------------------------------
+
+def _class_sums(h: Array, labels: Array, k: int) -> Array:
+    onehot = jax.nn.one_hot(labels, k, dtype=h.dtype)  # (n, k)
+    return onehot.T @ h  # (k, D)
+
+
+@partial(jax.jit, static_argnames=("k", "lr"))
+def _quanthd_epoch(fp: Array, binary: Array, q: Array, labels: Array,
+                   k: int, lr: float) -> Array:
+    """Eq.-(2) updates against a fixed binary AM snapshot (batched)."""
+    sims = q @ binary.T  # (n, k)
+    preds = jnp.argmax(sims, axis=-1)
+    mis = (preds != labels).astype(fp.dtype)  # (n,)
+    coef = (lr * mis)[:, None] * q
+    fp = fp.at[labels].add(coef)
+    fp = fp.at[preds].add(-coef)
+    return fp
+
+
+def fit_basic(key: Array, cfg: BaselineConfig, feats: Array, labels: Array,
+              ) -> BaselineModel:
+    enc_cfg = _encoder_cfg(cfg, feats.shape[-1])
+    k_enc, _ = jax.random.split(key)
+    enc_params = encoding.init_encoder(k_enc, enc_cfg)
+    h = encoding.encode(enc_params, enc_cfg, feats)
+    am = _sign(_class_sums(h, labels, cfg.classes))
+    owners = jnp.arange(cfg.classes, dtype=jnp.int32)
+    return BaselineModel(cfg, enc_cfg, enc_params, am, owners)
+
+
+def fit_quanthd(key: Array, cfg: BaselineConfig, feats: Array, labels: Array,
+                ) -> BaselineModel:
+    enc_cfg = _encoder_cfg(cfg, feats.shape[-1])
+    k_enc, _ = jax.random.split(key)
+    enc_params = encoding.init_encoder(k_enc, enc_cfg)
+    h = encoding.encode(enc_params, enc_cfg, feats)
+    q = encoding.binarize_query(h)
+    fp = _class_sums(h, labels, cfg.classes)
+    binary = _sign(fp - fp.mean())
+    for _ in range(cfg.epochs):
+        fp = _quanthd_epoch(fp, binary, q, labels, cfg.classes, cfg.lr)
+        binary = _sign(fp - fp.mean())
+    owners = jnp.arange(cfg.classes, dtype=jnp.int32)
+    return BaselineModel(cfg, enc_cfg, enc_params, binary, owners)
+
+
+# ---------------------------------------------------------------------------
+# LeHDC: BNN-style training with a straight-through estimator
+# ---------------------------------------------------------------------------
+
+def _ste_sign(x: Array) -> Array:
+    """sign(x) in the forward pass, identity gradient (clipped) backward."""
+    return x + jax.lax.stop_gradient(_sign(x) - x)
+
+
+@partial(jax.jit, static_argnames=("k", "lr", "momentum"))
+def _lehdc_step(fp: Array, vel: Array, q: Array, labels: Array,
+                k: int, lr: float, momentum: float,
+                ) -> Tuple[Array, Array, Array]:
+    def loss_fn(w):
+        logits = q @ _ste_sign(w).T / jnp.sqrt(w.shape[-1] * 1.0)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+        return nll
+
+    loss, grad = jax.value_and_grad(loss_fn)(fp)
+    vel = momentum * vel - lr * grad
+    fp = jnp.clip(fp + vel, -1.0, 1.0)  # BNN weight clipping
+    return fp, vel, loss
+
+
+def fit_lehdc(key: Array, cfg: BaselineConfig, feats: Array, labels: Array,
+              batch: int = 512, momentum: float = 0.9) -> BaselineModel:
+    enc_cfg = _encoder_cfg(cfg, feats.shape[-1])
+    k_enc, k_w = jax.random.split(key)
+    enc_params = encoding.init_encoder(k_enc, enc_cfg)
+    h = encoding.encode(enc_params, enc_cfg, feats)
+    q = encoding.binarize_query(h)
+    n = q.shape[0]
+    fp = 0.01 * jax.random.normal(k_w, (cfg.classes, cfg.dim))
+    vel = jnp.zeros_like(fp)
+    for _ in range(cfg.epochs):
+        for b in range(0, n, batch):
+            fp, vel, _ = _lehdc_step(fp, vel, q[b:b + batch],
+                                     labels[b:b + batch], cfg.classes,
+                                     cfg.lr, momentum)
+    owners = jnp.arange(cfg.classes, dtype=jnp.int32)
+    return BaselineModel(cfg, enc_cfg, enc_params, _sign(fp), owners)
+
+
+# ---------------------------------------------------------------------------
+# SearcHD: N-vector stochastic quantization
+# ---------------------------------------------------------------------------
+
+def fit_searchd(key: Array, cfg: BaselineConfig, feats: Array, labels: Array,
+                ) -> BaselineModel:
+    enc_cfg = _encoder_cfg(cfg, feats.shape[-1])
+    k_enc, k_q = jax.random.split(key)
+    enc_params = encoding.init_encoder(k_enc, enc_cfg)
+    h = encoding.encode(enc_params, enc_cfg, feats)
+    sums = _class_sums(h, labels, cfg.classes)  # (k, D) non-binary
+    # Per-dimension firing probability from the standardized class vector;
+    # N stochastic binary samples realize the N-vector quantization. The
+    # sharpening temperature keeps the Bernoulli noise from washing out
+    # the class signal at moderate D (SearcHD's own evaluations sit at
+    # 8000-D where the raw sigmoid suffices).
+    std = sums.std(axis=-1, keepdims=True) + 1e-8
+    p_fire = jax.nn.sigmoid(3.0 * sums / std)  # (k, D)
+    u = jax.random.uniform(
+        k_q, (cfg.classes, cfg.n_models, sums.shape[-1]))
+    am = jnp.where(u < p_fire[:, None, :], 1.0, -1.0)  # (k, N, D)
+    am = am.reshape(cfg.classes * cfg.n_models, sums.shape[-1])
+    owners = jnp.repeat(jnp.arange(cfg.classes, dtype=jnp.int32),
+                        cfg.n_models)
+    return BaselineModel(cfg, enc_cfg, enc_params, am, owners)
+
+
+FITTERS = {
+    "basic": fit_basic,
+    "quanthd": fit_quanthd,
+    "lehdc": fit_lehdc,
+    "searchd": fit_searchd,
+}
+
+
+def fit_baseline(key: Array, cfg: BaselineConfig, feats: Array,
+                 labels: Array) -> BaselineModel:
+    return FITTERS[cfg.kind](key, cfg, feats, labels)

@@ -1,0 +1,62 @@
+"""MemhdHead — the paper's multi-centroid AM as a classification head.
+
+The honest intersection between MEMHD (an HDC *classifier*) and the
+assigned generative backbones (DESIGN.md §Arch-applicability): pooled
+backbone features are projection-encoded into a D-dimensional bipolar
+hypervector and classified by one-shot associative search against a
+(C x D) binary multi-centroid AM — exactly the paper's pipeline with
+"features" = backbone embeddings instead of pixels.
+
+The head trains with the same clustering-init + QAIL recipe and deploys
+onto a single 128x128 IMC array (or one ``am_search`` kernel call) when
+D = C = 128.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.memhd import MemhdModel
+from repro.core.types import EncoderConfig, MemhdConfig
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class MemhdHead:
+    """Multi-centroid AM head over pooled backbone features."""
+
+    model: MemhdModel
+
+    @classmethod
+    def create(cls, key: Array, feature_dim: int, n_classes: int,
+               dim: int = 128, columns: int = 128, **am_kwargs,
+               ) -> "MemhdHead":
+        enc = EncoderConfig(kind="projection", features=feature_dim,
+                            dim=dim)
+        am = MemhdConfig(dim=dim, columns=columns, classes=n_classes,
+                         **am_kwargs)
+        return cls(MemhdModel.create(key, enc, am))
+
+    @staticmethod
+    def pool(hidden: Array) -> Array:
+        """Mean-pool (B, S, D_model) backbone states to (B, D_model)."""
+        return hidden.mean(axis=1)
+
+    def fit(self, key: Array, feats: Array, labels: Array, **kw,
+            ) -> Tuple["MemhdHead", Dict]:
+        m, hist = self.model.fit(key, feats, labels, **kw)
+        return MemhdHead(m), hist
+
+    def predict(self, feats: Array) -> Array:
+        return self.model.predict(feats)
+
+    def score(self, feats: Array, labels: Array) -> float:
+        return self.model.score(feats, labels)
+
+    @property
+    def memory_kb(self) -> float:
+        return self.model.memory_kb

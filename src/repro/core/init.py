@@ -1,0 +1,217 @@
+"""Clustering-based initialization of the multi-centroid AM (§III-A).
+
+Two phases, exactly following the paper:
+
+1. **Classwise clustering** — with ratio R, every class gets
+   ``n = max(1, floor(C*R / k))`` initial centroids from per-class
+   dot-similarity K-means over the encoded training hypervectors.
+2. **Cluster allocation** — the remaining ``C - k*n`` columns are handed
+   out round-by-round: validate on the full training set with the
+   *binarized* AM, build the confusion matrix, give the spare columns to
+   the classes with the highest misprediction counts, re-cluster those
+   classes with their enlarged budgets, repeat until every column is used
+   ("Once all columns are utilized, resulting in a fully utilized IMC
+   array, the initialization process is complete").
+
+The orchestration is host-side Python (the loop is data-dependent and
+runs once, offline); the inner K-means / evaluation steps are jitted.
+"""
+from __future__ import annotations
+
+import logging
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import am as am_lib
+from repro.core.kmeans import classwise_kmeans
+from repro.core.types import MemhdConfig
+
+Array = jax.Array
+log = logging.getLogger(__name__)
+
+
+def confusion_matrix(pred: Array, true: Array, n_classes: int) -> Array:
+    """(k, k) counts: rows = true class, cols = predicted class."""
+    idx = true.astype(jnp.int32) * n_classes + pred.astype(jnp.int32)
+    flat = jnp.bincount(idx, length=n_classes * n_classes)
+    return flat.reshape(n_classes, n_classes)
+
+
+def misprediction_counts(conf: Array) -> Array:
+    """Per-class misclassification counts (off-diagonal row sums)."""
+    return conf.sum(axis=1) - jnp.diagonal(conf)
+
+
+def _allocate_round(mispred: np.ndarray, budgets: np.ndarray,
+                    spare: int, max_per_class: np.ndarray) -> np.ndarray:
+    """Distribute up to ``spare`` new columns proportionally to
+    misprediction counts (at least the single worst class gets one).
+
+    Classes already at their sample-count ceiling receive nothing (a
+    centroid per sample is the useful maximum).
+    """
+    room = np.maximum(max_per_class - budgets, 0)
+    weights = mispred.astype(np.float64) * (room > 0)
+    if weights.sum() <= 0:
+        # Nothing mispredicted (or no room): spread round-robin over rooms.
+        order = np.argsort(-room)
+        add = np.zeros_like(budgets)
+        i = 0
+        while spare > 0 and room.sum() > 0:
+            c = order[i % len(order)]
+            if room[c] > 0:
+                add[c] += 1
+                room[c] -= 1
+                spare -= 1
+            i += 1
+        return add
+    shares = weights / weights.sum()
+    add = np.floor(shares * spare).astype(np.int64)
+    add = np.minimum(add, room)
+    # Hand out any remainder one by one to the worst offenders with room.
+    rem = spare - int(add.sum())
+    order = np.argsort(-weights)
+    i = 0
+    while rem > 0 and np.any(room - add > 0):
+        c = order[i % len(order)]
+        if room[c] - add[c] > 0 and weights[c] > 0:
+            add[c] += 1
+            rem -= 1
+        i += 1
+        if i > 10 * len(order):  # all weighted classes full; spill over
+            weights = (room - add > 0).astype(np.float64)
+            order = np.argsort(-weights)
+            i = 0
+    return add
+
+
+@jax.jit
+def _train_predictions(binary_am: Array, centroid_class: Array,
+                       queries: Array) -> Array:
+    return am_lib.predict(binary_am, centroid_class, queries)
+
+
+def clustering_init(
+    key: Array,
+    cfg: MemhdConfig,
+    h_train: Array,
+    labels: Array,
+    *,
+    queries: Array | None = None,
+    alloc_rounds_cap: int = 16,
+) -> Tuple[Array, Array, List[dict]]:
+    """Build the initial (C, D) float AM per §III-A.
+
+    Args:
+      key: PRNG key.
+      cfg: MEMHD configuration (C, k, R, kmeans_iters...).
+      h_train: (n, D) float encoded training hypervectors.
+      labels: (n,) int labels.
+      queries: (n, D) binarized queries used for the validation passes of
+        the allocation loop; defaults to sign(h_train).
+      alloc_rounds_cap: safety cap on allocation rounds; each round
+        allocates proportionally so a handful of rounds always suffices.
+
+    Returns:
+      (fp_am, centroid_class, history) where history logs each allocation
+      round (budgets, training accuracy) for the Fig.-5/6 benchmarks.
+    """
+    k, c_total = cfg.classes, cfg.columns
+    if queries is None:
+        queries = jnp.where(h_train >= 0, 1.0, -1.0)
+
+    n_init = cfg.initial_clusters_per_class
+    budgets = np.full((k,), n_init, np.int64)
+    # R=1.0 can still leave a remainder (floor division) — those columns
+    # also go through the allocation loop, as do the C(1-R) reserved ones.
+    spare = c_total - int(budgets.sum())
+    assert spare >= 0, (budgets, c_total)
+
+    labels_np = np.asarray(labels)
+    max_per_class = np.asarray(
+        [max(1, int((labels_np == c).sum())) for c in range(k)], np.int64)
+    budgets = np.minimum(budgets, max_per_class)
+    spare = c_total - int(budgets.sum())
+
+    history: List[dict] = []
+    keys = jax.random.split(key, alloc_rounds_cap + 1)
+    centroids, owners = classwise_kmeans(
+        keys[0], h_train, labels, k, list(budgets), cfg.kmeans_iters)
+
+    rounds = 0
+    while spare > 0 and rounds < alloc_rounds_cap:
+        rounds += 1
+        # Validation pass with the *binarized* AM (that is what deployment
+        # uses, so allocation should chase deployment errors).
+        binary = am_lib.binarize_am(centroids, cfg.threshold)
+        preds = _train_predictions(binary, owners, queries)
+        conf = confusion_matrix(preds, labels, k)
+        mispred = np.asarray(misprediction_counts(conf))
+        acc = float(np.asarray(jnp.diagonal(conf)).sum()) / labels_np.shape[0]
+
+        add = _allocate_round(mispred, budgets, spare, max_per_class)
+        if add.sum() == 0:
+            log.info("allocation saturated with %d spare columns", spare)
+            break
+        budgets = budgets + add
+        spare = c_total - int(budgets.sum())
+        history.append({
+            "round": rounds,
+            "train_acc": acc,
+            "mispred": mispred.tolist(),
+            "budgets": budgets.tolist(),
+            "spare": spare,
+        })
+        # Re-cluster only classes whose budget changed (the paper
+        # re-clusters after each assignment round).
+        changed = np.nonzero(add)[0]
+        new_centroids, new_owners = classwise_kmeans(
+            keys[rounds], h_train, labels, k, list(budgets),
+            cfg.kmeans_iters)
+        centroids, owners = new_centroids, new_owners
+        del changed  # full re-cluster keeps centroid layout canonical
+
+    if spare > 0:
+        # Degenerate corner (tiny datasets): hand leftovers to class 0 by
+        # duplicating its centroid with jitter so shapes stay (C, D).
+        log.warning("%d unallocated columns after cap; duplicating", spare)
+        reps_idx = np.where(np.asarray(owners) == int(np.argmax(budgets)))[0]
+        extra = jnp.asarray(
+            np.asarray(centroids)[reps_idx[:spare] % len(reps_idx)])
+        extra = extra + 1e-3 * jax.random.normal(keys[-1], extra.shape)
+        centroids = jnp.concatenate([centroids, extra], axis=0)
+        owners = jnp.concatenate(
+            [owners, jnp.full((spare,), int(np.argmax(budgets)), jnp.int32)])
+
+    assert centroids.shape == (c_total, cfg.dim), centroids.shape
+    return centroids, owners, history
+
+
+def random_sampling_init(
+    key: Array,
+    cfg: MemhdConfig,
+    h_train: Array,
+    labels: Array,
+) -> Tuple[Array, Array]:
+    """The baseline initializer of Fig. 5: centroids are randomly sampled
+    training hypervectors, columns split evenly across classes (remainder
+    round-robin)."""
+    k, c_total = cfg.classes, cfg.columns
+    base, rem = divmod(c_total, k)
+    budgets = np.asarray([base + (i < rem) for i in range(k)], np.int64)
+    labels_np = np.asarray(labels)
+    h_np = np.asarray(h_train)
+    rng = np.random.default_rng(np.asarray(
+        jax.random.key_data(key)).sum() % (2**31))
+    cents, owners = [], []
+    for c in range(k):
+        pool = np.nonzero(labels_np == c)[0]
+        take = rng.choice(pool, size=int(budgets[c]),
+                          replace=len(pool) < budgets[c])
+        cents.append(h_np[take])
+        owners.append(np.full((int(budgets[c]),), c, np.int32))
+    return (jnp.asarray(np.concatenate(cents, 0)),
+            jnp.asarray(np.concatenate(owners, 0)))

@@ -1,0 +1,146 @@
+"""K-means clustering with a dot-similarity assignment metric.
+
+The paper (§III-A1) clusters each class's encoded sample hypervectors with
+K-means whose distance metric is *dot similarity* — the same metric the
+associative search uses — "so that the clustering process is optimized for
+subsequent associative search operations".
+
+Assignment: argmax_j  <h_i, c_j / ||c_j||>  (dot similarity against
+            norm-equalized centroids — without the normalisation inside
+            the assignment, dot-sim K-means degenerates: the largest-norm
+            centroid absorbs everything).
+Update:     c_j <- mean of assigned samples. The *returned* centroids are
+            the raw cluster means: they live at sample-hypervector
+            magnitude, which is what makes the paper's Eq.-(6) updates
+            (lr * H with lr in [0.01, 0.1]) proportionate nudges.
+
+Empty clusters are re-seeded with the sample that is least similar to its
+current centroid (a k-means++-flavoured repair), keeping all K clusters
+alive — important here because every AM column must hold a usable
+centroid (full utilization).
+
+Pure JAX, fixed iteration count, jittable (shapes static).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _l2_normalize(x: Array, axis: int = -1, eps: float = 1e-8) -> Array:
+    return x / (jnp.linalg.norm(x, axis=axis, keepdims=True) + eps)
+
+
+def assign_dot(h: Array, centroids: Array) -> Array:
+    """argmax dot-similarity assignment. h: (n, D), centroids: (K, D)."""
+    sims = h @ centroids.T  # (n, K)
+    return jnp.argmax(sims, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("n_clusters", "n_iters"))
+def kmeans_dot(key: Array, h: Array, n_clusters: int,
+               n_iters: int = 25,
+               sample_weight: Array | None = None,
+               ) -> Tuple[Array, Array]:
+    """Run dot-similarity K-means.
+
+    Args:
+      key: PRNG key (initial centroid sampling).
+      h: (n, D) sample hypervectors (float).
+      n_clusters: K.
+      n_iters: Lloyd iterations (fixed count — jit-friendly; the paper
+        re-clusters repeatedly during allocation so exact convergence per
+        call is unnecessary).
+      sample_weight: optional (n,) non-negative weights (padding rows in
+        callers use weight 0 so they never influence centroids).
+
+    Returns:
+      (centroids, assignment): ((K, D) float32, (n,) int32).
+    """
+    n, d = h.shape
+    if sample_weight is None:
+        sample_weight = jnp.ones((n,), jnp.float32)
+    w = sample_weight.astype(jnp.float32)
+
+    # Weighted random init: sample K distinct-ish rows.
+    p = w / jnp.maximum(w.sum(), 1e-8)
+    init_idx = jax.random.choice(key, n, (n_clusters,), replace=False, p=p)
+    c0 = _l2_normalize(h[init_idx])
+
+    def step(carry, _):
+        c, _prev = carry
+        # Assignment uses norm-equalized centroids (dot-sim K-means).
+        sim = h @ _l2_normalize(c).T  # (n, K)
+        # Weight-zero rows must not be counted: push their sim to -inf for
+        # the *update* path by zeroing their weight contribution below.
+        a = jnp.argmax(sim, axis=-1)  # (n,)
+        one_hot = jax.nn.one_hot(a, n_clusters, dtype=jnp.float32) * w[:, None]
+        counts = one_hot.sum(axis=0)  # (K,)
+        sums = one_hot.T @ h  # (K, D)
+        new_c = sums / jnp.maximum(counts, 1e-8)[:, None]
+        # Empty-cluster repair: re-seed with the sample least similar to
+        # its own centroid (most "orphaned" point), weight-masked.
+        own_sim = jnp.take_along_axis(sim, a[:, None], axis=1)[:, 0]
+        own_sim = jnp.where(w > 0, own_sim, jnp.inf)
+        worst = jnp.argmin(own_sim)
+        empty = counts < 0.5
+        new_c = jnp.where(empty[:, None], h[worst][None, :], new_c)
+        return (new_c, a), None
+
+    (c, a), _ = jax.lax.scan(step, (c0, jnp.zeros((n,), jnp.int32)),
+                             None, length=n_iters)
+    # Final assignment against the final (norm-equalized) centroids.
+    a = assign_dot(h, _l2_normalize(c))
+    return c, a.astype(jnp.int32)
+
+
+def classwise_kmeans(key: Array, h: Array, labels: Array, n_classes: int,
+                     clusters_per_class: list[int], n_iters: int = 25,
+                     ) -> Tuple[Array, Array]:
+    """Per-class K-means (§III-A1 "Classwise Clustering").
+
+    Splits samples by class and clusters each class independently with its
+    own cluster budget. Classes are padded to a common max sample count so
+    each per-class call is a fixed-shape jitted kernel (weight-0 padding).
+
+    Args:
+      key: PRNG key.
+      h: (n, D) encoded sample hypervectors.
+      labels: (n,) int labels in [0, n_classes).
+      n_classes: k.
+      clusters_per_class: python list, len k — centroid budget per class.
+      n_iters: Lloyd iterations.
+
+    Returns:
+      (centroids, centroid_class):
+        centroids: (C_total, D) float32, where C_total = sum(budgets);
+        centroid_class: (C_total,) int32 owner class of each centroid.
+    """
+    import numpy as np  # host-side orchestration only
+
+    h_np = np.asarray(h)
+    y_np = np.asarray(labels)
+    cents, owners = [], []
+    keys = jax.random.split(key, n_classes)
+    for c in range(n_classes):
+        kc = int(clusters_per_class[c])
+        if kc <= 0:
+            continue
+        hc = h_np[y_np == c]
+        if hc.shape[0] == 0:
+            raise ValueError(f"class {c} has no samples to cluster")
+        if hc.shape[0] < kc:
+            # Fewer samples than requested clusters: tile samples.
+            reps = -(-kc // hc.shape[0])
+            hc = np.tile(hc, (reps, 1))
+        cc, _ = kmeans_dot(keys[c], jnp.asarray(hc), kc, n_iters)
+        cents.append(np.asarray(cc))
+        owners.append(np.full((kc,), c, np.int32))
+    centroids = jnp.asarray(np.concatenate(cents, axis=0))
+    centroid_class = jnp.asarray(np.concatenate(owners, axis=0))
+    return centroids, centroid_class

@@ -1,0 +1,159 @@
+"""MEMHD end-to-end model: encode -> cluster-init -> QAIL -> deploy.
+
+This is the public, paper-faithful pipeline (Fig. 2):
+
+    model  = MemhdModel.create(key, enc_cfg, am_cfg)
+    model, hist = model.fit(feats, labels)           # (a)-(c) of Fig. 2
+    acc    = model.score(test_feats, test_labels)    # (d) in-memory inference
+
+``MemhdModel`` is an immutable pytree-of-arrays + static configs, so it
+jits, shards, and checkpoints like any other model in the framework.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import am as am_lib
+from repro.core import encoding, init as init_lib, qail
+from repro.core.imc import ImcArrayConfig, memhd_pipeline
+from repro.core.types import EncoderConfig, MemhdConfig
+
+Array = jax.Array
+log = logging.getLogger(__name__)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MemhdModel:
+    """Immutable MEMHD model (encoder params + AM state + configs)."""
+
+    enc_params: Dict[str, Array]
+    am_state: Dict[str, Array]
+    enc_cfg: EncoderConfig
+    am_cfg: MemhdConfig
+
+    # -- pytree protocol -----------------------------------------------------
+    def tree_flatten(self):
+        return (self.enc_params, self.am_state), (self.enc_cfg, self.am_cfg)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        enc_params, am_state = children
+        enc_cfg, am_cfg = aux
+        return cls(enc_params, am_state, enc_cfg, am_cfg)
+
+    # -- construction ----------------------------------------------------------
+    @classmethod
+    def create(cls, key: Array, enc_cfg: EncoderConfig, am_cfg: MemhdConfig,
+               ) -> "MemhdModel":
+        if enc_cfg.dim != am_cfg.dim:
+            raise ValueError(
+                f"encoder D={enc_cfg.dim} != AM D={am_cfg.dim}")
+        enc_params = encoding.init_encoder(key, enc_cfg)
+        # AM starts empty; fit() builds it via clustering init.
+        zeros = jnp.zeros((am_cfg.columns, am_cfg.dim), jnp.float32)
+        owners = jnp.zeros((am_cfg.columns,), jnp.int32)
+        return cls(enc_params, am_lib.make_am_state(zeros, owners,
+                                                    am_cfg.threshold),
+                   enc_cfg, am_cfg)
+
+    # -- pipeline stages -------------------------------------------------------
+    def encode(self, feats: Array) -> Array:
+        return encoding.encode(self.enc_params, self.enc_cfg, feats)
+
+    def encode_query(self, feats: Array) -> Array:
+        return encoding.encode_query(self.enc_params, self.enc_cfg, feats)
+
+    def initialize_am(self, key: Array, feats: Array, labels: Array,
+                      *, method: str = "clustering",
+                      ) -> Tuple["MemhdModel", List[dict]]:
+        """Clustering-based (or random-sampling baseline) AM init (§III-A)."""
+        h = self.encode(feats)
+        q = encoding.binarize_query(h)
+        if method == "clustering":
+            fp, owners, history = init_lib.clustering_init(
+                key, self.am_cfg, h, labels, queries=q)
+        elif method == "random":
+            fp, owners = init_lib.random_sampling_init(
+                key, self.am_cfg, h, labels)
+            history = []
+        else:
+            raise ValueError(f"unknown init method {method!r}")
+        state = am_lib.make_am_state(fp, owners, self.am_cfg.threshold)
+        return dataclasses.replace(self, am_state=state), history
+
+    def fit(self, key: Array, feats: Array, labels: Array,
+            *, init_method: str = "clustering",
+            epochs: Optional[int] = None,
+            mode: str = "batched",
+            eval_feats: Optional[Array] = None,
+            eval_labels: Optional[Array] = None,
+            ) -> Tuple["MemhdModel", Dict]:
+        """Full training pipeline: init + QAIL epochs.
+
+        Returns (model, history) where history holds per-epoch train miss
+        rates and (optional) eval accuracies — consumed by the Fig.-5/6
+        benchmarks.
+        """
+        epochs = self.am_cfg.epochs if epochs is None else epochs
+        model, init_hist = self.initialize_am(
+            key, feats, labels, method=init_method)
+
+        h = model.encode(feats)
+        q = encoding.binarize_query(h)
+        eval_q = (model.encode_query(eval_feats)
+                  if eval_feats is not None else None)
+
+        curve: List[dict] = []
+        state = model.am_state
+        if eval_q is not None:
+            acc0 = qail.evaluate(state, eval_q, eval_labels)
+            curve.append({"epoch": 0, "eval_acc": acc0})
+        for ep in range(1, epochs + 1):
+            if mode == "sequential":
+                state = qail.qail_epoch_sequential(
+                    state, self.am_cfg, h, q, labels)
+                miss = float("nan")
+            else:
+                state, miss = qail.qail_epoch_batched(
+                    state, self.am_cfg, h, q, labels)
+            rec = {"epoch": ep, "train_miss": miss}
+            if eval_q is not None:
+                rec["eval_acc"] = qail.evaluate(state, eval_q, eval_labels)
+            curve.append(rec)
+        model = dataclasses.replace(model, am_state=state)
+        return model, {"init": init_hist, "curve": curve}
+
+    # -- inference ---------------------------------------------------------------
+    def predict(self, feats: Array) -> Array:
+        q = self.encode_query(feats)
+        return am_lib.predict(self.am_state["binary"],
+                              self.am_state["centroid_class"], q)
+
+    def score(self, feats: Array, labels: Array, batch: int = 4096) -> float:
+        n = feats.shape[0]
+        correct = 0
+        for b in range(0, n, batch):
+            pred = self.predict(feats[b:b + batch])
+            correct += int(jnp.sum(pred == labels[b:b + batch]))
+        return correct / n
+
+    # -- deployment accounting -----------------------------------------------------
+    @property
+    def memory_bits(self) -> int:
+        """EM + AM bits, per Table I (f*D + C*D binary)."""
+        return self.enc_cfg.memory_bits + self.am_cfg.am_memory_bits
+
+    @property
+    def memory_kb(self) -> float:
+        return self.memory_bits / 8 / 1024
+
+    def imc_cost(self, arr: ImcArrayConfig | None = None):
+        arr = arr or ImcArrayConfig()
+        return memhd_pipeline(self.enc_cfg.features, self.am_cfg.dim,
+                              self.am_cfg.columns, arr)

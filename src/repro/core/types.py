@@ -1,0 +1,214 @@
+"""Core configuration types for the MEMHD framework.
+
+Everything here is a plain frozen dataclass: configs are data, passed
+explicitly, hashable (so they can be static args to ``jax.jit``), and
+serializable into checkpoints' manifests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    """Configuration of the hypervector encoding module (EM).
+
+    Attributes:
+      kind: ``"projection"`` (binary random projection, MVM-based — the
+        encoder MEMHD and BasicHDC use; maps directly onto IMC arrays) or
+        ``"id_level"`` (ID x Level composition used by SearcHD / QuantHD /
+        LeHDC in the paper's baseline table).
+      features: input feature count ``f``.
+      dim: hypervector dimensionality ``D``.
+      levels: number of quantization levels ``L`` for id_level encoding.
+      binarize_query: if True the encoded hypervector is binarized
+        (sign) before associative search — the binary-HDC setting.
+    """
+
+    kind: str = "projection"
+    features: int = 784
+    dim: int = 1024
+    levels: int = 256
+    binarize_query: bool = True
+
+    def __post_init__(self):
+        if self.kind not in ("projection", "id_level"):
+            raise ValueError(f"unknown encoder kind: {self.kind!r}")
+        if self.features <= 0 or self.dim <= 0:
+            raise ValueError("features and dim must be positive")
+
+    @property
+    def memory_bits(self) -> int:
+        """Bits of EM storage, following Table I of the paper."""
+        if self.kind == "projection":
+            return self.features * self.dim  # f x D binary matrix
+        return (self.features + self.levels) * self.dim  # (f+L) x D
+
+
+@dataclasses.dataclass(frozen=True)
+class MemhdConfig:
+    """Configuration of the MEMHD multi-centroid associative memory.
+
+    ``dim`` x ``columns`` is the paper's D x C geometry: D matches the IMC
+    array's row count, C its column count (so ``128x128`` means D=128 and
+    C=128 total centroids across all classes).
+
+    Attributes:
+      dim: hypervector dimension D (AM row count).
+      columns: total number of centroids C (AM column count), summed over
+        classes — full utilization means every column holds a centroid.
+      classes: number of classes k.
+      init_ratio: the paper's R — fraction of columns filled by the
+        initial class-wise clustering; the remaining C(1-R) columns are
+        allocated by the confusion-matrix driven loop (§III-A2).
+      kmeans_iters: Lloyd iterations per (re-)clustering call.
+      epochs: quantization-aware iterative-learning epochs (§III-C).
+      lr: iterative-learning rate alpha (paper: 0.01-0.1).
+      update_with: which representation of the sample updates the float
+        AM in Eq. (6): "encoded" (pre-binarization H, default) or
+        "binary" (H^b).
+      normalize: per-centroid normalization applied to the float AM after
+        each epoch, before re-binarization (§III-C step 4). "l2" or "none".
+      threshold: binarization threshold for the AM: "mean" (paper,
+        §III-B: global mean of the float AM) or "per_centroid".
+      batch_size: minibatch size for the batched QAIL variant (the
+        sequential variant follows the paper sample-by-sample).
+      seed: PRNG seed.
+    """
+
+    dim: int = 128
+    columns: int = 128
+    classes: int = 10
+    init_ratio: float = 0.8
+    kmeans_iters: int = 25
+    epochs: int = 100
+    lr: float = 0.02
+    update_with: str = "encoded"
+    normalize: str = "l2"
+    threshold: str = "mean"
+    batch_size: int = 256
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.columns < self.classes:
+            raise ValueError(
+                f"C={self.columns} must be >= k={self.classes}: every class "
+                "needs at least one centroid"
+            )
+        if not (0.0 < self.init_ratio <= 1.0):
+            raise ValueError("init_ratio R must be in (0, 1]")
+        if self.update_with not in ("encoded", "binary"):
+            raise ValueError(f"bad update_with: {self.update_with!r}")
+        if self.normalize not in ("l2", "none"):
+            raise ValueError(f"bad normalize: {self.normalize!r}")
+        if self.threshold not in ("mean", "per_centroid"):
+            raise ValueError(f"bad threshold: {self.threshold!r}")
+
+    @property
+    def am_memory_bits(self) -> int:
+        """Binary AM footprint in bits (C x D), per Table I."""
+        return self.columns * self.dim
+
+    @property
+    def initial_clusters_per_class(self) -> int:
+        """n = max(1, floor(C*R / k)) — §III-A1."""
+        return max(1, int(self.columns * self.init_ratio) // self.classes)
+
+
+@dataclasses.dataclass(frozen=True)
+class ImcArrayConfig:
+    """Geometry + energy constants of one IMC array tile.
+
+    The paper evaluates 128x128 SRAM arrays with NeuroSim-derived
+    read/write energies [19], [20]. On TPU the same geometry is realized
+    as one 128x128 MXU block pass; the *relative* cost model (cycles =
+    sequential tile passes, energy ~ tiles processed) is identical, which
+    is what Table II and Fig. 7 report.
+
+    Attributes:
+      rows / cols: array dimensions (the paper uses 128x128).
+      e_read_pass_pj: energy of one full-array MVM (read) pass, pJ.
+      e_write_cell_fj: per-cell write energy, fJ (used by the training-
+        time write accounting; inference is read-only).
+      t_cycle_ns: latency of one array pass, ns.
+    """
+
+    rows: int = 128
+    cols: int = 128
+    e_read_pass_pj: float = 36.7
+    e_write_cell_fj: float = 0.58
+    t_cycle_ns: float = 5.2
+
+    def __post_init__(self):
+        if self.rows <= 0 or self.cols <= 0:
+            raise ValueError("array dims must be positive")
+
+
+@dataclasses.dataclass(frozen=True)
+class BaselineConfig:
+    """Configuration for the binary-HDC baselines of Table I.
+
+    Attributes:
+      kind: "basic" | "quanthd" | "lehdc" | "searchd".
+      dim: hypervector dimensionality D.
+      classes: k.
+      n_models: SearcHD's N (vector-quantization factor; paper fixes 64).
+      epochs: iterative epochs (quanthd / lehdc).
+      lr: learning rate.
+      seed: PRNG seed.
+    """
+
+    kind: str = "basic"
+    dim: int = 10240
+    classes: int = 10
+    n_models: int = 64
+    epochs: int = 30
+    lr: float = 0.05
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.kind not in ("basic", "quanthd", "lehdc", "searchd"):
+            raise ValueError(f"unknown baseline kind: {self.kind!r}")
+
+    def am_memory_bits(self) -> int:
+        """Binary AM bits, per Table I."""
+        if self.kind == "searchd":
+            return self.classes * self.dim * self.n_models
+        return self.classes * self.dim
+
+
+# Dataset shape registry (true dataset geometries; the synthetic
+# generators in repro.data.hdc are faithful to these).
+@dataclasses.dataclass(frozen=True)
+class DatasetSpec:
+    name: str
+    features: int
+    classes: int
+    train_per_class: int
+    test_per_class: int
+    # Number of latent intra-class modes the synthetic generator uses;
+    # chosen to mirror each dataset's known intra-class diversity.
+    latent_modes: int = 4
+
+
+DATASETS = {
+    "mnist": DatasetSpec("mnist", features=784, classes=10,
+                         train_per_class=6000, test_per_class=1000,
+                         latent_modes=6),
+    "fmnist": DatasetSpec("fmnist", features=784, classes=10,
+                          train_per_class=6000, test_per_class=1000,
+                          latent_modes=6),
+    "isolet": DatasetSpec("isolet", features=617, classes=26,
+                          train_per_class=240, test_per_class=60,
+                          latent_modes=3),
+}
+
+
+def dataset_spec(name: str) -> DatasetSpec:
+    try:
+        return DATASETS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown dataset {name!r}; known: {sorted(DATASETS)}"
+        ) from None

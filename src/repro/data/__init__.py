@@ -1,0 +1,1 @@
+from repro.data.hdc import load_dataset  # noqa: F401

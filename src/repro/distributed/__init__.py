@@ -1,0 +1,4 @@
+from repro.distributed.hlo import collective_bytes, parse_collectives  # noqa: F401
+from repro.distributed.roofline import (  # noqa: F401
+    HwSpec, RooflineReport, V5E, roofline,
+)

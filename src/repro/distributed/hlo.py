@@ -1,0 +1,127 @@
+"""Post-SPMD HLO inspection: collective inventory and wire-byte model.
+
+``compiled.as_text()`` is the per-device module after GSPMD partitioning —
+shapes are shard shapes, so summed sizes are *per-device* quantities.
+For each collective we estimate per-device wire bytes with the standard
+ring models:
+
+  all-gather(out B, group g)        : B * (g-1)/g          received
+  reduce-scatter(out B, group g)    : B * (g-1)            sent+recv of shards
+  all-reduce(B, group g)            : 2 * B * (g-1)/g      (RS + AG)
+  all-to-all(B, group g)            : B * (g-1)/g
+  collective-permute(B)             : B
+
+These are the bytes that cross links per chip, the quantity the roofline's
+collective term divides by link bandwidth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\()?\s*([a-z0-9]+)\[([\d,]*)\][^=]*?"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_TUPLE_COLL_RE = re.compile(
+    r"=\s+\((.+?)\)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nb = _DTYPE_BYTES.get(dtype)
+    if nb is None:
+        return 0
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * nb
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int
+    group_size: int
+    wire_bytes: float
+    line: str
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return total_devices
+
+
+def _wire_bytes(kind: str, nbytes: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if kind == "all-gather":
+        return nbytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return nbytes * (g - 1)
+    if kind == "all-reduce":
+        return 2.0 * nbytes * (g - 1) / g
+    if kind == "all-to-all":
+        return nbytes * (g - 1) / g
+    if kind == "collective-permute":
+        return float(nbytes)
+    return float(nbytes)
+
+
+def parse_collectives(hlo_text: str, total_devices: int,
+                      ) -> List[CollectiveOp]:
+    """Inventory all collectives (deduplicating -start/-done pairs)."""
+    ops: List[CollectiveOp] = []
+    seen_started: set = set()
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "-done(" in ls:
+            continue  # its -start twin carries the same payload
+        m = _COLL_RE.search(ls)
+        result_bytes = 0
+        kind = None
+        if m:
+            kind = m.group(3)
+            result_bytes = _shape_bytes(m.group(1), m.group(2))
+        else:
+            mt = _TUPLE_COLL_RE.search(ls)
+            if mt:
+                kind = mt.group(2)
+                for sm in _SHAPE_RE.finditer(mt.group(1)):
+                    result_bytes += _shape_bytes(sm.group(1), sm.group(2))
+        if kind is None:
+            continue
+        g = _group_size(ls, total_devices)
+        ops.append(CollectiveOp(
+            kind=kind, result_bytes=result_bytes, group_size=g,
+            wire_bytes=_wire_bytes(kind, result_bytes, g), line=ls[:200]))
+    del seen_started
+    return ops
+
+
+def collective_bytes(hlo_text: str, total_devices: int) -> Dict[str, float]:
+    """Summed per-device wire bytes by collective kind (+ 'total')."""
+    out: Dict[str, float] = {}
+    for op in parse_collectives(hlo_text, total_devices):
+        out[op.kind] = out.get(op.kind, 0.0) + op.wire_bytes
+        out["total"] = out.get("total", 0.0) + op.wire_bytes
+    return out

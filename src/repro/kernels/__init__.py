@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+The paper's whole deployment story is "the model IS the array": encoding
+and associative search are MVMs streamed through 128x128 IMC tiles. The
+TPU analogue keeps the exact geometry (MXU tile == IMC array), so each
+kernel's grid size *is* the paper's cycle count (asserted in tests).
+
+  binary_mvm   — tiled bipolar projection encoding (the EM)
+  am_search    — fused similarity + running arg-max (the AM, one-shot)
+  pack_bits    — 1-bit storage format for binary AM / projection
+  flash_decode — one-token GQA attention streaming a KV cache (the
+                 serving hot loop of the decode dry-run cells)
+  ssd_chunk    — the Mamba-2 SSD per-chunk body (decay + intra/inter
+                 products + state update) for the ssm/hybrid archs
+
+``ops`` is the public jit'd surface; ``ref`` holds pure-jnp oracles.
+"""
+from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels.flash_decode import flash_decode  # noqa: F401
+from repro.kernels.ssd_chunk import ssd_chunk  # noqa: F401

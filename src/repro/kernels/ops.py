@@ -1,0 +1,71 @@
+"""Public jit'd surface of the kernel package.
+
+Higher layers call these; each dispatches to the Pallas kernel (TPU, or
+interpret mode elsewhere) and is validated against ``repro.kernels.ref``
+across shape/dtype sweeps in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.am_search import am_search as _am_search
+from repro.kernels.am_search import imc_cycles_for as search_cycles
+from repro.kernels.binary_mvm import binary_mvm as _binary_mvm
+from repro.kernels.binary_mvm import imc_cycles_for as mvm_cycles
+from repro.kernels.pack_bits import pack_bits as _pack_bits
+from repro.kernels.pack_bits import unpack_bits as _unpack_bits
+
+Array = jax.Array
+
+__all__ = [
+    "encode_mvm", "am_search", "pack_bits", "unpack_bits",
+    "search_cycles", "mvm_cycles", "ref",
+]
+
+
+def encode_mvm(feats: Array, projection: Array, *, use_kernel: bool = True,
+               ) -> Array:
+    """Projection encoding H = F @ M through the IMC-geometry kernel.
+
+    feats: (B, f); projection: (f, D) bipolar. Returns (B, D) float32.
+    """
+    if not use_kernel:
+        return ref.binary_mvm(feats, projection)
+    return _binary_mvm(feats, projection)
+
+
+def am_search(queries: Array, am: Array, *, use_kernel: bool = True,
+              ) -> tuple[Array, Array]:
+    """Fused associative search.
+
+    queries: (B, D); am: (C, D) bipolar centroid rows (the (D, C)
+    transpose is formed here once — resident layout matches the IMC
+    array's column-major centroid placement).
+
+    Returns (best_idx, best_sim): (B,) int32, (B,) float32.
+    """
+    am_t = am.T
+    if not use_kernel:
+        return ref.am_search(queries, am_t)
+    return _am_search(queries, am_t)
+
+
+def pack_bits(x: Array, *, use_kernel: bool = True) -> Array:
+    if not use_kernel:
+        return ref.pack_bits(x)
+    return _pack_bits(x)
+
+
+def unpack_bits(p: Array, *, use_kernel: bool = True) -> Array:
+    if not use_kernel:
+        return ref.unpack_bits(p)
+    return _unpack_bits(p)
+
+
+def predict_classes(queries: Array, am: Array, centroid_class: Array,
+                    *, use_kernel: bool = True) -> Array:
+    """End-to-end §III-D prediction: search + ownership lookup."""
+    idx, _ = am_search(queries, am, use_kernel=use_kernel)
+    return centroid_class[idx]

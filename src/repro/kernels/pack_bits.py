@@ -1,0 +1,89 @@
+"""1-bit pack/unpack Pallas kernels — binary AM storage.
+
+The paper's memory-efficiency claims (Table I, Fig. 3) count the AM and
+projection matrix at 1 bit per cell. These kernels realize that storage
+format on TPU: bipolar (+-1) tiles are packed 8 cells/byte (LSB-first)
+for HBM residence and unpacked tile-by-tile into VMEM for compute.
+
+Both kernels are purely element-wise over (R, C) tiles, so blocks are
+(block_r, 1024) lanes — VPU work, no MXU involvement.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+LANES = 1024  # unpacked cells per block column; packed cols = LANES // 8
+
+
+def _pack_kernel(x_ref, o_ref):
+    x = x_ref[...]  # (bR, LANES)
+    br = x.shape[0]
+    bits = (x > 0).astype(jnp.int32).reshape(br, LANES // 8, 8)
+    weights = (2 ** jnp.arange(8, dtype=jnp.int32))
+    o_ref[...] = jnp.sum(bits * weights, axis=-1).astype(jnp.uint8)
+
+
+def _unpack_kernel(p_ref, o_ref):
+    p = p_ref[...].astype(jnp.int32)  # (bR, LANES // 8)
+    br = p.shape[0]
+    shifts = jnp.arange(8, dtype=jnp.int32)
+    bits = (p[:, :, None] >> shifts) & 1  # (bR, LANES//8, 8)
+    o_ref[...] = (bits.reshape(br, LANES).astype(jnp.float32) * 2 - 1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def pack_bits(x: Array, *, block_r: int = 256,
+              interpret: bool | None = None) -> Array:
+    """(R, C) bipolar -> (R, C // 8) uint8, C % 8 == 0 (pad upstream)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    r, c = x.shape
+    if c % 8:
+        raise ValueError(f"C={c} must be a multiple of 8")
+    br = min(block_r, max(r, 1))
+    pr = -r % br
+    pc = -c % LANES
+    xp = jnp.pad(x.astype(jnp.float32), ((0, pr), (0, pc)),
+                 constant_values=-1.0)
+    gr, gc = (r + pr) // br, (c + pc) // LANES
+
+    out = pl.pallas_call(
+        _pack_kernel,
+        grid=(gr, gc),
+        in_specs=[pl.BlockSpec((br, LANES), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((br, LANES // 8), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r + pr, (c + pc) // 8), jnp.uint8),
+        interpret=interpret,
+    )(xp)
+    return out[:r, : c // 8]
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def unpack_bits(packed: Array, *, block_r: int = 256,
+                interpret: bool | None = None) -> Array:
+    """(R, C//8) uint8 -> (R, C) bipolar float32 {-1, +1}."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    r, cb = packed.shape
+    br = min(block_r, max(r, 1))
+    pr = -r % br
+    pcb = -cb % (LANES // 8)
+    pp = jnp.pad(packed, ((0, pr), (0, pcb)))
+    gr, gc = (r + pr) // br, (cb + pcb) // (LANES // 8)
+
+    out = pl.pallas_call(
+        _unpack_kernel,
+        grid=(gr, gc),
+        in_specs=[pl.BlockSpec((br, LANES // 8), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((br, LANES), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r + pr, (cb + pcb) * 8),
+                                       jnp.float32),
+        interpret=interpret,
+    )(pp)
+    return out[:r, : cb * 8]

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the *semantics* — the kernels must match them bit-for-bit (exact
+integer-valued arithmetic) across the shape/dtype sweeps in
+tests/test_kernels.py. Keep them boring and obviously correct.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def binary_mvm(x: Array, w: Array) -> Array:
+    """H = x @ w with float32 accumulation.
+
+    x: (B, K) features or queries; w: (K, N) bipolar projection/AM weights.
+    """
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def am_search(q: Array, am_t: Array) -> tuple[Array, Array]:
+    """Fused associative search.
+
+    q: (B, D) queries; am_t: (D, C) transposed AM (column c = centroid c).
+
+    Returns:
+      (best_idx, best_sim): (B,) int32 argmax centroid (first-wins ties,
+      matching the kernel's running-compare semantics) and (B,) float32
+      max similarity.
+    """
+    sims = jnp.dot(q.astype(jnp.float32), am_t.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)  # (B, C)
+    best_idx = jnp.argmax(sims, axis=-1).astype(jnp.int32)
+    best_sim = jnp.max(sims, axis=-1)
+    return best_idx, best_sim
+
+
+def pack_bits(x: Array) -> Array:
+    """Pack bipolar/binary values into uint8, 8 cells per byte, LSB-first.
+
+    x: (R, C) with C % 8 == 0; a cell is "1" iff x > 0.
+
+    Returns: (R, C // 8) uint8.
+    """
+    r, c = x.shape
+    bits = (x > 0).astype(jnp.int32).reshape(r, c // 8, 8)
+    weights = (2 ** jnp.arange(8, dtype=jnp.int32))
+    return jnp.sum(bits * weights, axis=-1).astype(jnp.uint8)
+
+
+def unpack_bits(packed: Array, dtype=jnp.float32) -> Array:
+    """Inverse of pack_bits: (R, C//8) uint8 -> (R, C) bipolar {-1, +1}."""
+    r, cb = packed.shape
+    shifts = jnp.arange(8, dtype=jnp.int32)
+    bits = (packed.astype(jnp.int32)[:, :, None] >> shifts) & 1
+    return (bits.reshape(r, cb * 8).astype(dtype) * 2 - 1)

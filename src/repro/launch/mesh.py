@@ -1,0 +1,45 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+initialization, and smoke tests must keep seeing 1 device.
+
+Mesh geometry (TPU v5e pods of 256 chips):
+  single-pod:  (16, 16)       axes ("data", "model")
+  multi-pod:   (2, 16, 16)    axes ("pod", "data", "model")
+
+The "pod" axis is an outer data-parallel axis whose collectives cross the
+pod-to-pod (DCI) links — the axis the int8 error-feedback gradient
+compression targets. "model" carries TP / EP / long-context sequence
+sharding; "data" carries DP + FSDP.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.models.sharding import ShardingRules
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape: Tuple[int, ...] = (2, 4),
+                   axes: Tuple[str, ...] = ("data", "model")):
+    """Small mesh for CI on the 8-device fake backend."""
+    return jax.make_mesh(shape, axes)
+
+
+def make_rules(mesh, *, fsdp: bool = False, shard_seq: bool = False,
+               overrides: Optional[tuple] = None) -> ShardingRules:
+    return ShardingRules(mesh=mesh, fsdp=fsdp, shard_seq=shard_seq,
+                         overrides=overrides)
+
+
+def mesh_name(mesh) -> str:
+    return "x".join(str(s) for s in mesh.devices.shape)

@@ -1,0 +1,103 @@
+"""Batched serving driver: prefill + decode with KV/state caches.
+
+CPU-scale demonstration of the production decode path: a batch of
+requests is prefilled token-by-token into per-layer caches (attention
+ring buffers / MLA latents / SSM states) and then decoded with greedy or
+temperature sampling. The same ``decode_step`` is what the decode_32k and
+long_500k dry-run cells lower at pod scale.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m \
+      --smoke --batch 4 --prompt-len 32 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import logging
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+log = logging.getLogger("serve")
+
+
+def generate(mcfg, params, prompts: jax.Array, gen_len: int,
+             temperature: float = 0.0, seed: int = 0,
+             ) -> jax.Array:
+    """prompts: (B, P) int32 -> (B, P + gen_len) tokens."""
+    from repro.models import transformer as T
+
+    b, p = prompts.shape
+    max_len = p + gen_len
+    caches = T.init_cache(mcfg, b, max_len)
+    step = jax.jit(lambda pr, bt, c: T.decode_step(pr, mcfg, bt, c))
+
+    # Prefill token-by-token (prefill-as-decode keeps one compiled step;
+    # a chunked prefill path is the obvious next optimization).
+    logits = None
+    for t in range(p):
+        logits, caches = step(params, {"tokens": prompts[:, t:t + 1]},
+                              caches)
+    out = [prompts]
+    key = jax.random.key(seed)
+    cur = None
+    for t in range(gen_len):
+        if cur is None:
+            lg = logits
+        else:
+            lg, caches = step(params, {"tokens": cur}, caches)
+        lg = lg[..., : mcfg.vocab_size]  # drop padded-vocab logits
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            cur = jax.random.categorical(
+                sub, lg / temperature, axis=-1)[:, None]
+        else:
+            cur = jnp.argmax(lg, axis=-1)[:, None]
+        cur = cur.astype(jnp.int32)
+        out.append(cur)
+    return jnp.concatenate(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO)
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.models import transformer as T
+
+    mcfg = get_smoke_config(args.arch) if args.smoke else \
+        get_config(args.arch)
+    if mcfg.frontend != "none":
+        raise SystemExit("modality archs: see examples/ drivers")
+    params, _ = T.init_params(jax.random.key(0), mcfg)
+    prompts = jax.random.randint(
+        jax.random.key(1), (args.batch, args.prompt_len), 0,
+        mcfg.vocab_size, dtype=jnp.int32)
+
+    t0 = time.time()
+    out = generate(mcfg, params, prompts, args.gen,
+                   temperature=args.temperature)
+    dt = time.time() - t0
+    toks = args.batch * (args.prompt_len + args.gen)
+    print(json.dumps({
+        "arch": mcfg.name,
+        "batch": args.batch,
+        "tokens_total": int(toks),
+        "wall_s": round(dt, 2),
+        "tok_per_s": round(toks / dt, 1),
+        "sample_row": np.asarray(out[0, :16]).tolist(),
+    }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

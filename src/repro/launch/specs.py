@@ -1,0 +1,145 @@
+"""Input ShapeDtypeStruct stand-ins + shardings for every dry-run cell.
+
+``input_specs(arch, shape)`` builds the exact abstract inputs a cell's
+step function consumes — weak-type-correct, shardable, zero allocation.
+Train cells feed {tokens, targets, ...}; decode cells feed a one-token
+batch plus the fully-grown KV/state caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, shape_spec
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.models.sharding import ShardingRules
+
+Sds = jax.ShapeDtypeStruct
+
+
+def _batch_axes(mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def model_config_for_cell(arch: str, shape: str) -> ModelConfig:
+    cfg = get_config(arch)
+    spec = shape_spec(shape)
+    if spec.step == "decode":
+        # Decode caches dominate memory at 32k+ contexts: shard the KV /
+        # latent seq dimension over "model" (sequence parallelism for
+        # the cache; attention reduces over it with a psum XLA inserts).
+        cfg = dataclasses.replace(cfg, shard_seq=True)
+    return cfg
+
+
+def train_input_specs(cfg: ModelConfig, seq_len: int, global_batch: int,
+                      ) -> Dict[str, Sds]:
+    b, s = global_batch, seq_len
+    i32 = jnp.int32
+    if cfg.frontend == "audio_frames":
+        specs = {
+            "frame_embeds": Sds((b, s, cfg.d_model), jnp.bfloat16),
+            "targets": Sds((b, s, cfg.n_codebooks), i32),
+        }
+        if cfg.n_cond_tokens:
+            specs["cond_embeds"] = Sds((b, cfg.n_cond_tokens, cfg.d_model),
+                                       jnp.bfloat16)
+        return specs
+    if cfg.frontend == "vision_patches":
+        s_text = s - cfg.n_patches
+        return {
+            "tokens": Sds((b, s_text), i32),
+            "patch_feats": Sds((b, cfg.n_patches, T.VIT_DIM), jnp.bfloat16),
+            "targets": Sds((b, s_text), i32),
+        }
+    return {"tokens": Sds((b, s), i32), "targets": Sds((b, s), i32)}
+
+
+def decode_input_specs(cfg: ModelConfig, seq_len: int, global_batch: int,
+                       ) -> Tuple[Dict[str, Sds], Any]:
+    """(one-token batch, caches) abstract specs for a decode cell."""
+    b = global_batch
+    if cfg.frontend == "audio_frames":
+        batch = {"frame_embeds": Sds((b, 1, cfg.d_model), jnp.bfloat16)}
+        if cfg.n_cond_tokens:
+            batch["cond_embeds"] = Sds((b, cfg.n_cond_tokens, cfg.d_model),
+                                       jnp.bfloat16)
+    else:
+        batch = {"tokens": Sds((b, 1), jnp.int32)}
+    caches = jax.eval_shape(
+        lambda: T.init_cache(cfg, b, seq_len, "bfloat16"))
+    return batch, caches
+
+
+def input_specs(arch: str, shape: str) -> Dict[str, Any]:
+    """Public entry: abstract inputs for the (arch, shape) cell."""
+    cfg = model_config_for_cell(arch, shape)
+    sp = shape_spec(shape)
+    if sp.step == "train":
+        return {"batch": train_input_specs(cfg, sp.seq_len, sp.global_batch)}
+    batch, caches = decode_input_specs(cfg, sp.seq_len, sp.global_batch)
+    return {"batch": batch, "caches": caches}
+
+
+# ---------------------------------------------------------------------------
+# Shardings
+# ---------------------------------------------------------------------------
+
+def batch_shardings(mesh, batch_specs: Dict[str, Sds],
+                    ) -> Dict[str, NamedSharding]:
+    """Batch dim over the data axes; everything else replicated.
+
+    Batches smaller than the data axes (long_500k: batch 1) stay
+    replicated — their parallelism lives on the model axis instead.
+    """
+    ba = _batch_axes(mesh)
+    out = {}
+    for k, v in batch_specs.items():
+        lead = ba if _divisible(v.shape[0], ba, mesh) else None
+        rest = (None,) * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, P(lead, *rest))
+    return out
+
+
+def _divisible(n: int, axes: tuple, mesh) -> bool:
+    size = 1
+    for a in axes if isinstance(axes, tuple) else (axes,):
+        size *= mesh.shape[a]
+    return n % size == 0
+
+
+def cache_shardings(mesh, caches, rules: ShardingRules):
+    """Per-leaf cache shardings.
+
+    Rank-based heuristics over the known cache layouts (leaves carry the
+    group's ``repeat`` as leading axis L):
+      (L, B, S, H, D) k/v       -> (None, batch, seq?, None, None)
+      (L, B, S, R)    ckv/krope -> (None, batch, seq?, None)
+      (L, B, H, N, P) ssm state -> (None, batch, None, None, None)
+      (L, B, W, C)    conv      -> (None, batch, None, None)
+      (L, B)          len       -> (None, batch)
+    The seq dim is sharded over "model" only when rules.shard_seq and the
+    length divides the axis (ring-buffered window caches usually don't —
+    they stay local).
+    """
+    ba = _batch_axes(mesh)
+
+    def leaf_spec(x) -> NamedSharding:
+        shape = x.shape
+        rank = len(shape)
+        parts: list = [None] * rank
+        if rank >= 2:
+            if _divisible(shape[1], ba, mesh):
+                parts[1] = ba
+        if rank >= 4 and rules.shard_seq:
+            # dim 2 is the seq dim for k/v/ckv caches
+            if _divisible(shape[2], ("model",), mesh) and shape[2] > 1024:
+                parts[2] = "model"
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree.map(leaf_spec, caches)

@@ -1,0 +1,4 @@
+from repro.models.config import (  # noqa: F401
+    AttnSpec, BlockSpec, FfnSpec, ModelConfig, SsmSpec,
+)
+from repro.models import layers, sharding, transformer  # noqa: F401

@@ -1,0 +1,149 @@
+"""Logical-to-physical sharding rules (MaxText-style).
+
+Layers annotate parameters and activations with *logical* axis names;
+a ``ShardingRules`` context maps those to physical mesh axes. No rules
+active (unit tests, single device) -> every annotation is a no-op.
+
+Physical axes: ("pod", "data", "model") on the multi-pod mesh,
+("data", "model") single-pod. "pod" is folded into the batch/fsdp axes
+when present.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Maps logical axis names to physical mesh axes."""
+
+    mesh: Mesh
+    fsdp: bool = False          # shard big param dims over the data axes
+    shard_seq: bool = False     # long-context: activations' seq on model
+    # Extra/overriding logical->physical entries (hillclimb knob).
+    overrides: Optional[Tuple[Tuple[str, Optional[Tuple[str, ...]]], ...]] \
+        = None
+
+    def table(self) -> Dict[str, Optional[Tuple[str, ...]]]:
+        b = _batch_axes(self.mesh)
+        t: Dict[str, Optional[Tuple[str, ...]]] = {
+            # activations
+            "batch": b,
+            "seq": ("model",) if self.shard_seq else None,
+            "kv_seq": ("model",) if self.shard_seq else None,
+            "act_embed": None,
+            "act_heads": ("model",),
+            "act_mlp": ("model",),
+            "act_vocab": ("model",),
+            "act_experts": ("model",),
+            # parameters
+            "vocab": ("model",),
+            "embed": b if self.fsdp else None,
+            "heads": ("model",),
+            "kv_heads": ("model",),
+            "head_dim": None,
+            "mlp": ("model",),
+            "experts": ("model",),
+            "expert_mlp": None,
+            "lora": None,
+            "conv": None,
+            "ssm_inner": ("model",),
+            "ssm_state": None,
+            None: None,
+        }
+        if self.overrides:
+            t.update(dict(self.overrides))
+        return t
+
+    def spec(self, logical: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None) -> P:
+        """Resolve logical names to a PartitionSpec.
+
+        When ``shape`` is provided, mesh axes that do not divide the
+        corresponding dimension are dropped (graceful fallback to
+        replication — e.g. hymba's 25 heads or qwen's 40 heads cannot
+        split 16 ways; their TP lives on the FFN instead). Divisibility
+        is required by GSPMD; padding the model dims is a per-arch
+        hillclimb option, not a baseline default.
+        """
+        t = self.table()
+        parts = []
+        used: set = set()
+        for i, name in enumerate(logical):
+            ax = t.get(name)
+            if ax is None:
+                parts.append(None)
+                continue
+            ax = tuple(a for a in ax if a in self.mesh.axis_names
+                       and a not in used)
+            if shape is not None and ax:
+                dim = shape[i]
+                keep = []
+                prod = 1
+                for a in ax:
+                    if dim % (prod * self.mesh.shape[a]) == 0:
+                        keep.append(a)
+                        prod *= self.mesh.shape[a]
+                ax = tuple(keep)
+            used.update(ax)
+            parts.append(ax if len(ax) > 1 else (ax[0] if ax else None))
+        return P(*parts)
+
+    def sharding(self, logical: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical, shape))
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_state, "rules", None)
+
+
+def shard_act(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    """Annotate an activation with a logical sharding (no-op without rules)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, rules.sharding(logical, x.shape))
+
+
+def param_sharding_tree(axes_tree, rules: Optional[ShardingRules],
+                        params_tree=None):
+    """Map a tree of logical-axis tuples to NamedShardings (or None).
+
+    ``params_tree`` (arrays or ShapeDtypeStructs, same structure) enables
+    divisibility-aware fallback per leaf.
+    """
+    is_axes_leaf = lambda x: isinstance(x, tuple)  # noqa: E731
+    if rules is None:
+        return jax.tree.map(lambda _: None, axes_tree, is_leaf=is_axes_leaf)
+    if params_tree is None:
+        return jax.tree.map(lambda ax: rules.sharding(ax), axes_tree,
+                            is_leaf=is_axes_leaf)
+    flat_axes, treedef = jax.tree.flatten(axes_tree, is_leaf=is_axes_leaf)
+    flat_params = treedef.flatten_up_to(params_tree)
+    shardings = [rules.sharding(ax, p.shape)
+                 for ax, p in zip(flat_axes, flat_params)]
+    return treedef.unflatten(shardings)

@@ -1,0 +1,9 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig, adamw_init, adamw_update,
+)
+from repro.optim.schedule import (  # noqa: F401
+    ScheduleConfig, make_schedule,
+)
+from repro.optim.compression import (  # noqa: F401
+    ef_int8_compress, ef_int8_decompress,
+)

@@ -1,0 +1,43 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    kind: str = "cosine"        # "cosine" | "linear" | "constant"
+    warmup_steps: int = 200
+    total_steps: int = 10_000
+    min_ratio: float = 0.1      # floor as a fraction of peak lr
+
+    def __post_init__(self):
+        if self.kind not in ("cosine", "linear", "constant"):
+            raise ValueError(f"bad schedule kind {self.kind!r}")
+        if self.warmup_steps < 0 or self.total_steps <= 0:
+            raise ValueError("bad schedule steps")
+
+
+def make_schedule(cfg: ScheduleConfig):
+    """Returns step -> lr multiplier in [min_ratio, 1]."""
+
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, s / jnp.maximum(cfg.warmup_steps, 1))
+        if cfg.kind == "constant":
+            decay = 1.0
+        else:
+            frac = jnp.clip(
+                (s - cfg.warmup_steps)
+                / max(cfg.total_steps - cfg.warmup_steps, 1),
+                0.0, 1.0)
+            if cfg.kind == "cosine":
+                decay = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+            else:  # linear
+                decay = 1.0 - frac
+        mult = cfg.min_ratio + (1 - cfg.min_ratio) * decay
+        return warm * mult
+
+    return fn

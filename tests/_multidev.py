@@ -1,0 +1,31 @@
+"""Helper to run a python snippet under a fake multi-device CPU backend.
+
+jax locks the device count at first init, so multi-device tests must run
+in a fresh subprocess with XLA_FLAGS set before import.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_multidev(code: str, n_devices: int = 8, timeout: int = 560,
+                 ) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={n_devices}")
+    env["PYTHONPATH"] = REPO_SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-c", code], env=env, timeout=timeout,
+        capture_output=True, text=True)
+
+
+def check_multidev(code: str, n_devices: int = 8, timeout: int = 560):
+    r = run_multidev(code, n_devices, timeout)
+    assert r.returncode == 0, (
+        f"subprocess failed\nSTDOUT:\n{r.stdout[-4000:]}\n"
+        f"STDERR:\n{r.stderr[-4000:]}")
+    return r.stdout

@@ -1,0 +1,114 @@
+"""Table II of the paper, asserted verbatim — the strongest faithfulness
+check available without the physical SRAM testbed (the table is
+closed-form in the mapping geometry)."""
+import pytest
+
+from repro.core.imc import (
+    ImcArrayConfig, am_energy_ratio, assert_consistent, map_basic,
+    map_memhd, map_partitioned, mxu_grid, table2,
+)
+
+ARR = ImcArrayConfig()  # 128x128, the paper's array
+
+
+class TestTable2MnistFmnist:
+    """Table II-(a): MNIST/FMNIST, baseline 10240D x 10 classes."""
+
+    def setup_method(self):
+        self.t = table2(ARR)["mnist_fmnist"]
+
+    def test_basic(self):
+        c = self.t["basic"]
+        assert c.em.cycles == 560 and c.em.arrays == 560
+        assert c.am.cycles == 80 and c.am.arrays == 80
+        assert c.total_cycles == 640 and c.total_arrays == 640
+        assert abs(c.am.utilization - 0.0781) < 1e-3
+
+    def test_partition_p5(self):
+        c = self.t["partition_p5"]
+        assert c.am.cycles == 80          # partitioning never saves cycles
+        assert c.am.arrays == 16          # ...but saves arrays
+        assert abs(c.am.utilization - 0.3906) < 1e-3
+
+    def test_partition_p10(self):
+        c = self.t["partition_p10"]
+        assert c.am.cycles == 80
+        assert c.am.arrays == 8
+        assert abs(c.am.utilization - 0.7813) < 1e-3
+
+    def test_memhd(self):
+        c = self.t["memhd"]
+        assert c.em.cycles == 7 and c.am.cycles == 1   # one-shot search
+        assert c.total_cycles == 8 and c.total_arrays == 8
+        assert c.am.utilization == 1.0                 # fully utilized
+
+    def test_improvements(self):
+        base, memhd = self.t["basic"], self.t["memhd"]
+        assert base.total_cycles // memhd.total_cycles == 80   # 80x
+        assert base.total_arrays // memhd.total_arrays == 80
+        # vs best partitioning (P=10): 568 arrays -> 71x fewer
+        p10 = self.t["partition_p10"]
+        assert (p10.total_arrays) // memhd.total_arrays == 71
+
+
+class TestTable2Isolet:
+    """Table II-(b): ISOLET, baseline 10240D x 26 classes."""
+
+    def setup_method(self):
+        self.t = table2(ARR)["isolet"]
+
+    def test_basic(self):
+        c = self.t["basic"]
+        assert c.em.cycles == 400 and c.am.cycles == 80
+        assert c.total_cycles == 480 and c.total_arrays == 480
+        assert abs(c.am.utilization - 0.2031) < 1e-3
+
+    def test_partitions(self):
+        p2, p4 = self.t["partition_p2"], self.t["partition_p4"]
+        assert p2.am.cycles == 80 and p2.am.arrays == 40
+        assert abs(p2.am.utilization - 0.4063) < 1e-3
+        assert p4.am.cycles == 80 and p4.am.arrays == 20
+        assert abs(p4.am.utilization - 0.8125) < 1e-3
+
+    def test_memhd(self):
+        c = self.t["memhd"]
+        assert c.em.cycles == 20 and c.am.cycles == 4
+        assert c.total_cycles == 24 and c.total_arrays == 24
+        assert c.am.utilization == 1.0
+
+    def test_improvements(self):
+        base, memhd = self.t["basic"], self.t["memhd"]
+        assert base.total_cycles / memhd.total_cycles == 20.0   # 20x
+        assert base.total_arrays / memhd.total_arrays == 20.0
+        p4 = self.t["partition_p4"]
+        assert (p4.total_arrays) / memhd.total_arrays == 17.5   # 17.5x
+
+
+class TestEnergyModel:
+    """Fig. 7 ratios: energy ~ sequential tile passes."""
+
+    def test_basic_80x(self):
+        assert am_energy_ratio(128, 128, 10240, 10) == 80.0
+
+    def test_lehdc_4x(self):
+        # LeHDC at 400D, 10 classes vs MEMHD 128x128
+        assert am_energy_ratio(128, 128, 400, 10) == 4.0
+
+    def test_partitioning_constant_energy(self):
+        e_base = map_basic(10240, 10, ARR).energy_pj(ARR)
+        for p in (5, 10):
+            e_p = map_partitioned(10240, 10, p, ARR).energy_pj(ARR)
+            assert e_p == e_base  # Fig. 7: partitioning never saves energy
+
+
+class TestKernelConsistency:
+    """The Pallas kernel's grid must equal the IMC cycle model."""
+
+    @pytest.mark.parametrize("d,c", [(128, 128), (512, 128), (1024, 1024),
+                                     (256, 64), (130, 257)])
+    def test_grid_equals_cycles(self, d, c):
+        assert_consistent(d, c, ARR)
+
+    def test_grid_shape(self):
+        assert mxu_grid(512, 128) == (4, 1)
+        assert map_memhd(512, 128, ARR).cycles == 4

@@ -1,0 +1,132 @@
+"""Per-kernel validation: shape/dtype sweeps against the pure-jnp oracles
+(ref.py), plus the kernel-geometry == IMC-cost-model consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import imc
+from repro.kernels import ops, ref
+from repro.kernels.am_search import imc_cycles_for as search_cycles
+from repro.kernels.binary_mvm import imc_cycles_for as mvm_cycles
+
+RNG = np.random.default_rng(42)
+
+
+def bipolar(shape, dtype=np.float32):
+    return jnp.asarray(RNG.choice([-1.0, 1.0], size=shape).astype(dtype))
+
+
+class TestBinaryMvm:
+    @pytest.mark.parametrize("b,f,d", [
+        (1, 128, 128), (4, 784, 256), (3, 617, 512), (37, 100, 130),
+        (2, 129, 64), (256, 64, 64),
+    ])
+    def test_matches_oracle(self, b, f, d):
+        x = jnp.asarray(RNG.normal(size=(b, f)).astype(np.float32))
+        w = bipolar((f, d))
+        got = ops.encode_mvm(x, w)
+        want = ref.binary_mvm(x, w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-3)
+
+    @pytest.mark.parametrize("dtype", [np.float32, np.int8])
+    def test_dtypes(self, dtype):
+        x = jnp.asarray(
+            RNG.integers(-3, 3, size=(4, 256)).astype(dtype))
+        w = bipolar((256, 128)).astype(dtype)
+        got = ops.encode_mvm(x.astype(jnp.float32), w.astype(jnp.float32))
+        want = ref.binary_mvm(x.astype(jnp.float32), w.astype(jnp.float32))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+    def test_exact_integer_arithmetic(self):
+        # Bipolar x bipolar products are integers: results must be exact.
+        x = bipolar((8, 512))
+        w = bipolar((512, 256))
+        got = np.asarray(ops.encode_mvm(x, w))
+        want = np.asarray(ref.binary_mvm(x, w))
+        np.testing.assert_array_equal(got, want)
+
+    def test_cycle_model(self):
+        assert mvm_cycles((8, 784), (784, 10240)) == \
+            imc.map_basic(784, 10240, imc.ImcArrayConfig()).cycles
+
+
+class TestAmSearch:
+    @pytest.mark.parametrize("b,d,c", [
+        (1, 128, 128), (8, 128, 128), (3, 256, 64), (5, 512, 300),
+        (2, 130, 257), (300, 64, 26),
+    ])
+    def test_matches_oracle(self, b, d, c):
+        q = bipolar((b, d))
+        am = bipolar((c, d))
+        gi, gs = ops.am_search(q, am)
+        wi, ws = ref.am_search(q, am.T)
+        np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+        np.testing.assert_allclose(np.asarray(gs), np.asarray(ws))
+
+    def test_tie_breaking_first_wins(self):
+        # Duplicate centroids force ties; argmax must take the first.
+        q = bipolar((4, 128))
+        row = bipolar((1, 128))
+        am = jnp.concatenate([row, row, row], axis=0)
+        gi, _ = ops.am_search(q, am)
+        assert np.all(np.asarray(gi) == 0)
+
+    def test_one_shot_for_paper_geometry(self):
+        # The 128x128 AM search is exactly one grid step (one IMC cycle).
+        assert search_cycles((128, 128)) == 1
+        assert search_cycles((512, 128)) == \
+            imc.map_memhd(512, 128, imc.ImcArrayConfig()).cycles
+
+    def test_predict_classes(self):
+        q = bipolar((16, 128))
+        am = bipolar((64, 128))
+        owners = jnp.asarray(RNG.integers(0, 10, size=(64,)),
+                             dtype=jnp.int32)
+        pred = ops.predict_classes(q, am, owners)
+        sims = np.asarray(q) @ np.asarray(am).T
+        want = np.asarray(owners)[sims.argmax(axis=1)]
+        np.testing.assert_array_equal(np.asarray(pred), want)
+
+
+class TestPackBits:
+    @pytest.mark.parametrize("r,c", [(128, 128), (7, 64), (200, 1032),
+                                     (1, 8), (300, 2048)])
+    def test_roundtrip(self, r, c):
+        x = bipolar((r, c))
+        p = ops.pack_bits(x)
+        assert p.dtype == jnp.uint8 and p.shape == (r, c // 8)
+        np.testing.assert_array_equal(np.asarray(p),
+                                      np.asarray(ref.pack_bits(x)))
+        u = ops.unpack_bits(p)
+        np.testing.assert_array_equal(np.asarray(u), np.asarray(x))
+
+    def test_memory_ratio(self):
+        # The point of the paper: 1 bit per cell.
+        x = bipolar((128, 1024))
+        p = ops.pack_bits(x)
+        assert p.size * p.dtype.itemsize * 8 == x.size  # 1 bit per cell
+
+    def test_rejects_bad_width(self):
+        with pytest.raises(ValueError):
+            ops.pack_bits(bipolar((4, 31)))
+
+
+class TestKernelIntegration:
+    def test_end_to_end_inference_path(self, small_hdc_data):
+        """Kernel-path inference == jnp-path inference on a real model."""
+        from repro.core import EncoderConfig, MemhdConfig, MemhdModel
+        ds = small_hdc_data
+        enc = EncoderConfig(kind="projection", features=ds.features,
+                            dim=128)
+        amc = MemhdConfig(dim=128, columns=64, classes=ds.classes,
+                          epochs=2, kmeans_iters=5)
+        m = MemhdModel.create(jax.random.key(0), enc, amc)
+        m, _ = m.fit(jax.random.key(1), ds.train_x, ds.train_y)
+
+        q = m.encode_query(ds.test_x[:64])
+        jnp_pred = np.asarray(m.predict(ds.test_x[:64]))
+        kern_pred = np.asarray(ops.predict_classes(
+            q, m.am_state["binary"], m.am_state["centroid_class"]))
+        np.testing.assert_array_equal(jnp_pred, kern_pred)

@@ -1,0 +1,60 @@
+"""int8 KV-cache decode: numerics vs the f32 path + size accounting."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.config import AttnSpec
+
+
+class TestQuantRows:
+    def test_roundtrip_error_bounded(self):
+        x = jax.random.normal(jax.random.key(0), (4, 8, 16)) * 3.0
+        q, s = L._quant_rows(x)
+        deq = q.astype(jnp.float32) * s.astype(jnp.float32)[..., None]
+        rel = float(jnp.max(jnp.abs(deq - x)) / jnp.max(jnp.abs(x)))
+        assert rel < 0.01, rel
+        assert q.dtype == jnp.int8 and s.dtype == jnp.float16
+
+    def test_zero_rows_safe(self):
+        q, s = L._quant_rows(jnp.zeros((2, 3, 8)))
+        assert np.all(np.asarray(q) == 0)
+        assert np.all(np.isfinite(np.asarray(s, dtype=np.float32)))
+
+
+class TestQuantDecode:
+    @pytest.mark.parametrize("arch", ["qwen1.5-32b", "granite-20b"])
+    def test_matches_forward_within_quant_error(self, arch):
+        cfg = get_smoke_config(arch)
+        cfgq = dataclasses.replace(cfg, kv_cache_quant=True)
+        B, S = 2, 64
+        params, _ = T.init_params(jax.random.key(0), cfg)
+        tokens = jax.random.randint(jax.random.key(1), (B, S), 0,
+                                    cfg.vocab_size)
+        logits, _ = jax.jit(lambda p, b: T.forward(p, cfg, b))(
+            params, {"tokens": tokens, "targets": tokens})
+        caches = T.init_cache(cfgq, B, S)
+        step = jax.jit(lambda p, b, c: T.decode_step(p, cfgq, b, c))
+        for t in range(S):
+            lg, caches = step(params, {"tokens": tokens[:, t:t + 1]},
+                              caches)
+        diff = float(jnp.max(jnp.abs(lg - logits[:, -1])))
+        scale = float(jnp.max(jnp.abs(logits[:, -1]))) + 1e-6
+        assert diff < 5e-2 * scale, (arch, diff / scale)
+
+    def test_cache_bytes_halved(self):
+        spec = AttnSpec(kind="gqa", n_heads=8, n_kv_heads=8, head_dim=64)
+
+        def nbytes(tree):
+            return sum(x.size * x.dtype.itemsize
+                       for x in jax.tree.leaves(tree))
+
+        full = L.init_gqa_cache(spec, 4, 1024, jnp.bfloat16)
+        quant = L.init_gqa_cache(spec, 4, 1024, jnp.bfloat16, quant=True)
+        ratio = nbytes(full) / nbytes(quant)
+        assert ratio > 1.8, ratio  # ~2x minus the fp16 scales

@@ -1,0 +1,182 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train step
+on CPU, output shapes + finiteness; decode==forward consistency for the
+cache-bearing families; param-count sanity vs published sizes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.models import transformer as T
+
+EXPECTED_PARAMS_B = {
+    "hymba-1.5b": (1.0, 2.2),
+    "qwen1.5-32b": (29.0, 38.0),
+    "nemotron-4-340b": (320.0, 360.0),
+    "gemma3-12b": (10.5, 13.5),
+    "granite-20b": (18.0, 22.0),
+    "musicgen-medium": (1.2, 2.2),
+    "deepseek-v2-lite-16b": (14.0, 17.5),
+    "deepseek-v3-671b": (650.0, 700.0),
+    "internvl2-2b": (1.4, 2.2),
+    "mamba2-130m": (0.10, 0.16),
+}
+
+
+def make_batch(cfg, B=2, S=64, seed=0):
+    key = jax.random.key(seed)
+    if cfg.frontend == "audio_frames":
+        b = {"frame_embeds": jax.random.normal(key, (B, S, cfg.d_model)),
+             "targets": jax.random.randint(
+                 key, (B, S, cfg.n_codebooks), 0, cfg.vocab_size)}
+        if cfg.n_cond_tokens:
+            b["cond_embeds"] = jax.random.normal(
+                key, (B, cfg.n_cond_tokens, cfg.d_model))
+        return b
+    if cfg.frontend == "vision_patches":
+        s_text = S - cfg.n_patches
+        return {
+            "tokens": jax.random.randint(key, (B, s_text), 0,
+                                         cfg.vocab_size),
+            "patch_feats": jax.random.normal(key,
+                                             (B, cfg.n_patches, T.VIT_DIM)),
+            "targets": jax.random.randint(key, (B, s_text), 0,
+                                          cfg.vocab_size),
+        }
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    return {"tokens": toks, "targets": toks}
+
+
+class TestSmokeForward:
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_forward_and_loss(self, arch):
+        cfg = get_smoke_config(arch)
+        params, axes = T.init_params(jax.random.key(0), cfg)
+        batch = make_batch(cfg)
+        logits, aux = jax.jit(
+            lambda p, b: T.forward(p, cfg, b))(params, batch)
+        b, s = 2, 64
+        if cfg.frontend == "audio_frames":
+            assert logits.shape == (b, s, cfg.n_codebooks,
+                                    cfg.padded_vocab)
+        elif cfg.frontend == "vision_patches":
+            assert logits.shape == (b, s, cfg.padded_vocab)
+        else:
+            assert logits.shape == (b, s, cfg.padded_vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+        loss, metrics = jax.jit(
+            lambda p, bt: T.loss_fn(p, cfg, bt))(params, batch)
+        assert bool(jnp.isfinite(loss))
+
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_train_step(self, arch):
+        from repro.distributed.steps import make_train_step
+        from repro.optim import AdamWConfig, ScheduleConfig, make_schedule
+
+        cfg = get_smoke_config(arch)
+        params, _ = T.init_params(jax.random.key(0), cfg)
+        from repro.optim import adamw_init
+        opt_cfg = AdamWConfig(lr=1e-3)
+        opt = adamw_init(params, opt_cfg)
+        sched = make_schedule(ScheduleConfig(warmup_steps=0, total_steps=10))
+        step = jax.jit(make_train_step(cfg, opt_cfg, sched))
+        batch = make_batch(cfg, S=32)
+        p2, o2, metrics = step(params, opt, batch,
+                               jnp.asarray(1, jnp.int32))
+        assert bool(jnp.isfinite(metrics["loss"]))
+        # Params actually moved.
+        delta = sum(float(jnp.abs(a - b).max()) for a, b in zip(
+            jax.tree.leaves(params), jax.tree.leaves(p2)))
+        assert delta > 0
+
+
+class TestParamCounts:
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_full_config_matches_published_size(self, arch):
+        lo, hi = EXPECTED_PARAMS_B[arch]
+        n = get_config(arch).param_count() / 1e9
+        assert lo <= n <= hi, f"{arch}: {n:.2f}B not in [{lo}, {hi}]"
+
+    def test_moe_active_counts(self):
+        v3 = get_config("deepseek-v3-671b")
+        active = v3.active_param_count() / 1e9
+        assert 34.0 <= active <= 41.0  # published: 37B active
+
+    def test_layer_counts(self):
+        for arch, want in [("hymba-1.5b", 32), ("qwen1.5-32b", 64),
+                           ("nemotron-4-340b", 96), ("gemma3-12b", 48),
+                           ("granite-20b", 52), ("musicgen-medium", 48),
+                           ("deepseek-v2-lite-16b", 27),
+                           ("deepseek-v3-671b", 61), ("internvl2-2b", 24),
+                           ("mamba2-130m", 24)]:
+            assert get_config(arch).n_layers == want, arch
+
+
+class TestDecodeConsistency:
+    """decode_step with caches must reproduce the full forward pass."""
+
+    @pytest.mark.parametrize("arch", [
+        "mamba2-130m",        # SSD state decode
+        "gemma3-12b",         # ring-buffer window + global mix
+        "deepseek-v2-lite-16b",  # MLA absorbed decode + MoE
+        "hymba-1.5b",         # hybrid: attn cache + SSM state
+    ])
+    def test_matches_forward(self, arch):
+        cfg = get_smoke_config(arch)
+        B, S = 2, 96
+        params, _ = T.init_params(jax.random.key(0), cfg)
+        tokens = jax.random.randint(jax.random.key(1), (B, S), 0,
+                                    cfg.vocab_size)
+        logits, _ = jax.jit(lambda p, b: T.forward(p, cfg, b))(
+            params, {"tokens": tokens, "targets": tokens})
+        caches = T.init_cache(cfg, B, S)
+        step = jax.jit(lambda p, b, c: T.decode_step(p, cfg, b, c))
+        for t in range(S):
+            lg, caches = step(params, {"tokens": tokens[:, t:t + 1]},
+                              caches)
+        diff = float(jnp.max(jnp.abs(lg - logits[:, -1])))
+        scale = float(jnp.max(jnp.abs(logits[:, -1]))) + 1e-6
+        assert diff < 2e-2 * scale, (arch, diff, scale)
+
+
+class TestArchitectureFeatures:
+    def test_qwen_has_qkv_bias(self):
+        cfg = get_config("qwen1.5-32b")
+        assert cfg.blocks[0].attn.qkv_bias
+
+    def test_gemma_local_global_pattern(self):
+        cfg = get_config("gemma3-12b")
+        windows = []
+        for b in cfg.blocks:
+            windows.extend([b.attn.window] * b.repeat)
+        assert len(windows) == 48
+        assert windows.count(None) == 8          # 8 global layers
+        assert windows.count(1024) == 40         # 40 local layers
+        # 5:1 repeating pattern: every 6th layer is global.
+        assert all(w is None for w in windows[5::6])
+
+    def test_granite_is_mqa(self):
+        assert get_config("granite-20b").blocks[0].attn.n_kv_heads == 1
+
+    def test_deepseek_v3_router_is_sigmoid_aux_free(self):
+        cfg = get_config("deepseek-v3-671b")
+        moe = cfg.blocks[1].ffn
+        assert moe.router == "sigmoid"
+        assert moe.n_experts == 256 and moe.top_k == 8
+        assert cfg.mtp_depth == 1
+
+    def test_mamba_attention_free(self):
+        cfg = get_config("mamba2-130m")
+        assert all(b.mixer == "ssm" for b in cfg.blocks)
+        assert all(b.attn is None for b in cfg.blocks)
+
+    def test_hymba_is_parallel_hybrid(self):
+        cfg = get_config("hymba-1.5b")
+        assert all(b.mixer == "hybrid" for b in cfg.blocks)
+        assert cfg.blocks[0].ssm.d_state == 16
+
+    def test_musicgen_codebooks_and_cross_attn(self):
+        cfg = get_config("musicgen-medium")
+        assert cfg.n_codebooks == 4
+        assert cfg.blocks[0].cross_attn
+        assert cfg.vocab_size == 2048

@@ -1,0 +1,134 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import am as am_lib
+from repro.core.encoding import binarize_query
+from repro.core.init import confusion_matrix, misprediction_counts
+from repro.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def bipolar_matrix(draw, max_rows=24, max_cols=96):
+    r = draw(st.integers(1, max_rows))
+    c = draw(st.integers(8, max_cols).filter(lambda x: x % 8 == 0))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.choice([-1.0, 1.0], size=(r, c)))
+
+
+class TestBipolarRankEquivalence:
+    """{0,1} vs {-1,+1} encodings give identical argmax rankings.
+
+    dot(q, 2b-1) = 2*dot(q, b) - sum(q): affine in the {0,1} similarity
+    with a per-query constant, so rankings over centroids are preserved —
+    this is what licenses storing the paper's {0,1} cells as MXU-friendly
+    +-1 operands (DESIGN.md §2).
+    """
+
+    @settings(**SETTINGS)
+    @given(bipolar_matrix(), st.integers(0, 2**31 - 1))
+    def test_rank_preserved(self, am_bipolar, seed):
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.choice([-1.0, 1.0],
+                                   size=(4, am_bipolar.shape[1])))
+        uni = (am_bipolar + 1.0) / 2.0  # {0, 1}
+        sims_bi = q @ am_bipolar.T
+        sims_uni = q @ uni.T
+        np.testing.assert_array_equal(
+            np.asarray(jnp.argmax(sims_bi, -1)),
+            np.asarray(jnp.argmax(sims_uni, -1)))
+
+
+class TestBinarization:
+    @settings(**SETTINGS)
+    @given(st.integers(0, 2**31 - 1), st.integers(2, 20), st.integers(8, 64))
+    def test_idempotent(self, seed, r, c):
+        rng = np.random.default_rng(seed)
+        fp = jnp.asarray(rng.normal(size=(r, c)))
+        b1 = am_lib.binarize_am(fp)
+        b2 = am_lib.binarize_am(b1)
+        # Binarizing a bipolar matrix keeps it bipolar with same signs
+        # (mean of +-1 values lies strictly between -1 and 1 unless
+        # degenerate all-equal case).
+        if float(jnp.abs(b1).sum()) != b1.size:  # pragma: no cover
+            return
+        if float(jnp.abs(jnp.mean(b1))) < 1.0 - 1e-6:
+            np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+
+    @settings(**SETTINGS)
+    @given(st.integers(0, 2**31 - 1))
+    def test_unipolar_roundtrip(self, seed):
+        rng = np.random.default_rng(seed)
+        fp = jnp.asarray(rng.normal(size=(8, 32)))
+        b = am_lib.binarize_am(fp)
+        np.testing.assert_array_equal(
+            np.asarray(am_lib.from_unipolar(am_lib.to_unipolar(b))),
+            np.asarray(b))
+
+    @settings(**SETTINGS)
+    @given(st.integers(0, 2**31 - 1))
+    def test_threshold_is_mean(self, seed):
+        rng = np.random.default_rng(seed)
+        fp = jnp.asarray(rng.normal(size=(6, 40)).astype(np.float32))
+        b = am_lib.binarize_am(fp, "mean")
+        mu = float(jnp.mean(fp))
+        want = np.where(np.asarray(fp) > mu, 1.0, -1.0)
+        np.testing.assert_array_equal(np.asarray(b), want)
+
+
+class TestPackBitsProperty:
+    @settings(**SETTINGS)
+    @given(bipolar_matrix())
+    def test_roundtrip(self, x):
+        np.testing.assert_array_equal(
+            np.asarray(ref.unpack_bits(ref.pack_bits(x))), np.asarray(x))
+
+
+class TestQueryBinarization:
+    @settings(**SETTINGS)
+    @given(st.integers(0, 2**31 - 1))
+    def test_strictly_bipolar(self, seed):
+        rng = np.random.default_rng(seed)
+        h = jnp.asarray(rng.normal(size=(5, 64)))
+        q = binarize_query(h)
+        assert set(np.unique(np.asarray(q))) <= {-1.0, 1.0}
+        # zero maps to +1 (no third value)
+        q0 = binarize_query(jnp.zeros((2, 8)))
+        assert float(q0.min()) == 1.0
+
+
+class TestConfusion:
+    @settings(**SETTINGS)
+    @given(st.integers(0, 2**31 - 1), st.integers(2, 8), st.integers(5, 60))
+    def test_counts_sum(self, seed, k, n):
+        rng = np.random.default_rng(seed)
+        true = jnp.asarray(rng.integers(0, k, size=(n,)))
+        pred = jnp.asarray(rng.integers(0, k, size=(n,)))
+        conf = confusion_matrix(pred, true, k)
+        assert int(jnp.sum(conf)) == n
+        mis = misprediction_counts(conf)
+        assert int(jnp.sum(mis)) == int(jnp.sum(pred != true))
+        assert np.all(np.asarray(mis) >= 0)
+
+
+class TestClassMaxSims:
+    @settings(**SETTINGS)
+    @given(st.integers(0, 2**31 - 1), st.integers(2, 6), st.integers(8, 30))
+    def test_matches_loop(self, seed, k, c):
+        rng = np.random.default_rng(seed)
+        sims = jnp.asarray(rng.normal(size=(3, c)).astype(np.float32))
+        owners = jnp.asarray(
+            np.concatenate([np.arange(k),
+                            rng.integers(0, k, size=(c - k,))]),
+            dtype=jnp.int32)
+        got = np.asarray(am_lib.class_max_sims(sims, owners, k))
+        for b in range(3):
+            for cls in range(k):
+                mask = np.asarray(owners) == cls
+                want = np.asarray(sims)[b][mask].max()
+                np.testing.assert_allclose(got[b, cls], want, rtol=1e-6)
