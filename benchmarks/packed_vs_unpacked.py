@@ -1,0 +1,76 @@
+"""Packed (XOR+popcount) vs unpacked (float MXU) associative search.
+
+Compares the two deployment paths over the paper geometries: bit-exact
+parity of (idx, sim), resident-AM bytes (the Table-I 1-bit accounting
+vs byte/float cells), and CPU wall time of the jit'd oracle for each
+domain (interpret-mode Pallas is a correctness tool, not a throughput
+proxy — see kernel_bench.py). Emits one JSON row per geometry plus the
+standard CSV rows.
+"""
+import json
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import row, section, time_fn
+from repro.core.imc import ImcArrayConfig, map_memhd
+from repro.kernels import ops, ref
+from repro.kernels.am_search_packed import imc_cycles_for as packed_cycles
+
+GEOMS = [(128, 128), (256, 256), (512, 128), (1024, 1024)]
+BATCH = 256
+
+
+def main() -> None:
+    section("Packed vs unpacked associative search")
+    rng = np.random.default_rng(0)
+    arr = ImcArrayConfig()
+    for d, c in GEOMS:
+        q = jnp.asarray(rng.choice([-1., 1.], size=(BATCH, d))
+                        .astype(np.float32))
+        am = jnp.asarray(rng.choice([-1., 1.], size=(c, d))
+                         .astype(np.float32))
+        qp = ops.pack_rows(q)
+        apt = ops.pack_rows(am).T
+
+        # Bit-exact parity: packed kernel == unpacked kernel == jnp argmax.
+        ui, us = ops.am_search(q[:16], am)
+        pi, ps = ops.am_search_packed(qp[:16], apt, n_dims=d)
+        np.testing.assert_array_equal(np.asarray(pi), np.asarray(ui))
+        np.testing.assert_array_equal(np.asarray(ps), np.asarray(us))
+
+        unpacked_us = time_fn(
+            jax.jit(lambda qq, aa: ref.am_search(qq, aa)), q, am.T,
+            iters=5)
+        packed_us = time_fn(
+            jax.jit(lambda qq, aa: ref.am_search_packed(qq, aa, d)),
+            qp, apt, iters=5)
+
+        packed_bytes = int(apt.size)
+        float_bytes = c * d * 4
+        cycles = map_memhd(d, c, arr).cycles
+        assert packed_cycles(apt.shape) == cycles
+        rec = {
+            "bench": "packed_vs_unpacked",
+            "geometry": f"{d}x{c}",
+            "batch": BATCH,
+            "unpacked_us": round(unpacked_us, 1),
+            "packed_us": round(packed_us, 1),
+            "resident_bytes_packed": packed_bytes,
+            "resident_bytes_cells": c * d,      # 1 byte/cell
+            "resident_bytes_float32": float_bytes,
+            "memory_ratio_vs_cells": round(c * d / packed_bytes, 2),
+            "memory_ratio_vs_float32": round(float_bytes / packed_bytes,
+                                             2),
+            "imc_cycles": cycles,
+            "bit_exact": True,
+        }
+        print(json.dumps(rec), flush=True)
+        row(f"packed_vs_unpacked/{d}x{c}", packed_us,
+            f"unpacked_us={unpacked_us:.1f};"
+            f"ratio_vs_cells={c * d / packed_bytes:.0f}x")
+
+
+if __name__ == "__main__":
+    main()

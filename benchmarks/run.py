@@ -13,6 +13,7 @@ BENCHES = [
     ("table2", "benchmarks.table2_imc_mapping"),
     ("fig7", "benchmarks.fig7_energy"),
     ("kernel", "benchmarks.kernel_bench"),
+    ("packed", "benchmarks.packed_vs_unpacked"),
     ("fig3", "benchmarks.fig3_accuracy_memory"),
     ("fig4", "benchmarks.fig4_heatmap"),
     ("fig5", "benchmarks.fig5_init"),
@@ -20,7 +21,7 @@ BENCHES = [
     ("ablation", "benchmarks.ablations"),
     ("roofline", "benchmarks.roofline_report"),
 ]
-FAST = {"table2", "fig7", "kernel", "roofline"}
+FAST = {"table2", "fig7", "kernel", "packed", "roofline"}
 
 
 def main() -> None:

@@ -1,0 +1,25 @@
+"""Version-compat shims for the installed jax.
+
+The repo targets current jax APIs; these helpers keep it running on the
+0.4.x line the container ships:
+
+* ``shard_map`` — top-level ``jax.shard_map`` is recent; 0.4.x has it
+  under ``jax.experimental.shard_map``.
+* ``axis_size`` — ``jax.lax.axis_size`` is recent; ``psum(1, axis)``
+  constant-folds to a Python int on every release.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def axis_size(axis_name: str) -> int:
+    """Static size of a named mesh axis, on any jax version."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)

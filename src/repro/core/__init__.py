@@ -3,6 +3,6 @@ from repro.core.types import (  # noqa: F401
     BaselineConfig, DatasetSpec, EncoderConfig, ImcArrayConfig, MemhdConfig,
     dataset_spec,
 )
-from repro.core.memhd import MemhdModel  # noqa: F401
+from repro.core.memhd import DeployedMemhd, MemhdModel  # noqa: F401
 from repro.core.baselines import BaselineModel, fit_baseline  # noqa: F401
 from repro.core import am, encoding, imc, init, kmeans, qail  # noqa: F401

@@ -100,6 +100,40 @@ def class_max_sims(sims: Array, centroid_class: Array, n_classes: int,
 
 
 # ---------------------------------------------------------------------------
+# Packed 1-bit residence (§ Table I made literal)
+# ---------------------------------------------------------------------------
+
+def pack_am(binary_am: Array) -> Array:
+    """(C, D) bipolar AM -> (Dp, C) uint8 packed transposed residence.
+
+    Dp = ceil(D/8); bits are LSB-first along D with tail bits 0, the
+    layout of ``kernels.pack_bits`` / ``kernels.ref.pack_rows``. The
+    transpose matches the IMC array's column-major centroid placement
+    (and the (D, C) operand of the am_search kernels).
+    """
+    from repro.kernels import ref as kernel_ref
+    return kernel_ref.pack_rows(binary_am).T
+
+
+def packed_am_bytes(dim: int, columns: int) -> int:
+    """Resident bytes of the packed (Dp, C) AM: ceil(D/8) * C."""
+    return (-(-dim // 8)) * columns
+
+
+def packed_predict(am_packed_t: Array, centroid_class: Array,
+                   queries: Array, n_dims: int) -> Array:
+    """Pure-jnp packed-domain prediction (oracle for the kernel path).
+
+    queries: (..., D) bipolar — packed here; am_packed_t: (Dp, C) uint8.
+    """
+    from repro.kernels import ref as kernel_ref
+    q2 = queries.reshape(-1, queries.shape[-1])
+    best, _ = kernel_ref.am_search_packed(
+        kernel_ref.pack_rows(q2), am_packed_t, n_dims)
+    return centroid_class[best].reshape(queries.shape[:-1])
+
+
+# ---------------------------------------------------------------------------
 # AM state constructors
 # ---------------------------------------------------------------------------
 

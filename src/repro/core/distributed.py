@@ -27,6 +27,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import qail
 from repro.core.types import EncoderConfig, MemhdConfig
 
+from repro.compat import shard_map as _shard_map
+
 Array = jax.Array
 
 
@@ -86,7 +88,7 @@ def make_epoch_fn(enc_cfg: EncoderConfig, am_cfg: MemhdConfig,
             return new_fp, miss
 
         from jax.sharding import PartitionSpec as P
-        new_fp, miss = jax.shard_map(
+        new_fp, miss = _shard_map(
             local, mesh=mesh,
             in_specs=(P(), P(), P(), P(), P(all_axes, None), P(all_axes)),
             out_specs=(P(), P()),

@@ -27,6 +27,23 @@ Array = jax.Array
 log = logging.getLogger(__name__)
 
 
+def _batched_accuracy(predict_fn, feats: Array, labels: Array,
+                      batch: int) -> float:
+    n = feats.shape[0]
+    correct = 0
+    for b in range(0, n, batch):
+        pred = predict_fn(feats[b:b + batch])
+        correct += int(jnp.sum(pred == labels[b:b + batch]))
+    return correct / n
+
+
+def _imc_cost(enc_cfg: EncoderConfig, am_cfg: MemhdConfig,
+              arr: ImcArrayConfig | None):
+    arr = arr or ImcArrayConfig()
+    return memhd_pipeline(enc_cfg.features, am_cfg.dim, am_cfg.columns,
+                          arr)
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class MemhdModel:
@@ -136,12 +153,30 @@ class MemhdModel:
                               self.am_state["centroid_class"], q)
 
     def score(self, feats: Array, labels: Array, batch: int = 4096) -> float:
-        n = feats.shape[0]
-        correct = 0
-        for b in range(0, n, batch):
-            pred = self.predict(feats[b:b + batch])
-            correct += int(jnp.sum(pred == labels[b:b + batch]))
-        return correct / n
+        return _batched_accuracy(self.predict, feats, labels, batch)
+
+    # -- deployment --------------------------------------------------------------
+    def deploy(self, *, packed: bool = True, mode: str = "popcount",
+               ) -> "DeployedMemhd":
+        """Freeze the trained model into its serving artifact.
+
+        ``packed=True`` packs the binary AM 8 cells/byte into the (Dp, C)
+        uint8 residence that the paper's Table I counts (1 bit/cell) and
+        routes ``score``/``predict`` through the fused XOR+popcount
+        kernel; ``packed=False`` keeps the ±1 float AM and the float
+        ``am_search`` kernel (the parity baseline). Predictions are
+        bit-exact between the two.
+        """
+        binary = self.am_state["binary"]
+        am_packed_t = am_lib.pack_am(binary) if packed else None
+        return DeployedMemhd(
+            enc_params=self.enc_params,
+            am_binary=None if packed else binary,
+            am_packed_t=am_packed_t,
+            centroid_class=self.am_state["centroid_class"],
+            enc_cfg=self.enc_cfg, am_cfg=self.am_cfg,
+            packed=packed, mode=mode,
+        )
 
     # -- deployment accounting -----------------------------------------------------
     @property
@@ -154,6 +189,86 @@ class MemhdModel:
         return self.memory_bits / 8 / 1024
 
     def imc_cost(self, arr: ImcArrayConfig | None = None):
-        arr = arr or ImcArrayConfig()
-        return memhd_pipeline(self.enc_cfg.features, self.am_cfg.dim,
-                              self.am_cfg.columns, arr)
+        return _imc_cost(self.enc_cfg, self.am_cfg, arr)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DeployedMemhd:
+    """Frozen serving artifact of a trained MEMHD model.
+
+    The deployment story of the paper (§III-D): the trained binary AM is
+    *resident* in the array and queried one-shot. Here the residence is
+    either the packed (Dp, C) uint8 matrix (``packed=True`` — 1 bit per
+    cell, the Table-I accounting) searched by the XOR+popcount kernel, or
+    the ±1 float32 (C, D) matrix searched by the float MXU kernel
+    (``packed=False``). Both produce identical predictions; the packed
+    artifact is ~8x smaller than even a 1-byte-per-cell unpacked AM (and
+    32x smaller than the float32 training representation).
+
+    Immutable pytree: jits, shards, and checkpoints like the trainer.
+    """
+
+    enc_params: Dict[str, Array]
+    am_binary: Optional[Array]     # (C, D) float32, unpacked deployment
+    am_packed_t: Optional[Array]   # (Dp, C) uint8, packed deployment
+    centroid_class: Array          # (C,) int32
+    enc_cfg: EncoderConfig
+    am_cfg: MemhdConfig
+    packed: bool = True
+    mode: str = "popcount"         # packed kernel: "popcount" | "unpack"
+
+    def tree_flatten(self):
+        children = (self.enc_params, self.am_binary, self.am_packed_t,
+                    self.centroid_class)
+        aux = (self.enc_cfg, self.am_cfg, self.packed, self.mode)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        enc_params, am_binary, am_packed_t, centroid_class = children
+        enc_cfg, am_cfg, packed, mode = aux
+        return cls(enc_params, am_binary, am_packed_t, centroid_class,
+                   enc_cfg, am_cfg, packed, mode)
+
+    # -- inference -------------------------------------------------------------
+    def predict_query(self, q: Array) -> Array:
+        """(B, D) bipolar queries -> (B,) predicted class."""
+        from repro.kernels import ops
+        if self.packed:
+            idx, _ = ops.am_search_packed(
+                ops.pack_rows(q), self.am_packed_t,
+                n_dims=self.am_cfg.dim, mode=self.mode)
+        else:
+            idx, _ = ops.am_search(q, self.am_binary)
+        return self.centroid_class[idx]
+
+    def predict(self, feats: Array) -> Array:
+        q = encoding.encode_query(self.enc_params, self.enc_cfg, feats)
+        return self.predict_query(q)
+
+    def score(self, feats: Array, labels: Array, batch: int = 4096,
+              ) -> float:
+        return _batched_accuracy(self.predict, feats, labels, batch)
+
+    # -- deployment accounting -------------------------------------------------
+    @property
+    def resident_am_bytes(self) -> int:
+        """Bytes the resident AM actually occupies in HBM."""
+        if self.packed:
+            return int(self.am_packed_t.size)  # uint8
+        return int(self.am_binary.size * self.am_binary.dtype.itemsize)
+
+    @property
+    def am_memory_ratio(self) -> float:
+        """Byte-per-cell residence / this artifact's bytes.
+
+        The smallest addressable unpacked cell is one byte (uint8 {0,1}),
+        so a packed artifact reports ~8x; the float32 AM the unpacked
+        kernel deploys is another 4x on top of that (32x total).
+        """
+        cell_bytes = self.am_cfg.columns * self.am_cfg.dim  # uint8 cells
+        return cell_bytes / self.resident_am_bytes
+
+    def imc_cost(self, arr: ImcArrayConfig | None = None):
+        return _imc_cost(self.enc_cfg, self.am_cfg, arr)

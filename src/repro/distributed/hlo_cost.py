@@ -132,13 +132,18 @@ def _dot_flops(instr: Instr, comp: Computation) -> float:
     cm = _CONTRACT.search(instr.rhs)
     k = 1
     if cm:
-        # lhs operand: first %name inside the call parens
+        # lhs operand: first operand name inside the call parens
         om = _OPERANDS.search(instr.rhs[instr.rhs.index(instr.kind + "("):])
         if om:
-            ops = [o.strip().lstrip("%") for o in om.group(1).split(",")]
-            # operand tokens may carry inline types; name is last token
-            lhs = ops[0].split()[-1].lstrip("%") if ops else None
+            lhs = _operand_names(om.group(1))
+            lhs = lhs[0] if lhs else None
             lhs_type = comp.shapes.get(lhs, "")
+            # Some HLO dumps print the operand's type inline
+            # ("dot(f32[64,128]{1,0} %x, ...)") — use it directly when
+            # the name isn't resolvable (e.g. cross-computation refs).
+            if not _first_shape_dims(lhs_type):
+                tm = _SHAPE.search(om.group(1))
+                lhs_type = tm.group(0) if tm else ""
             lhs_dims = _first_shape_dims(lhs_type)
             if lhs_dims and cm.group(1).strip():
                 for idx in cm.group(1).split(","):
@@ -146,6 +151,24 @@ def _dot_flops(instr: Instr, comp: Computation) -> float:
                     if i < len(lhs_dims):
                         k *= lhs_dims[i]
     return 2.0 * out * k
+
+
+def _operand_names(operand_text: str) -> List[str]:
+    """Operand instruction names from a call's paren contents.
+
+    Handles both bare-name operands ("dot(x, y)") and typed operands
+    whose layouts contain commas ("dot(f32[64,128]{1,0} %x, ...)") — a
+    naive split(",") breaks on the latter, so prefer %-prefixed tokens.
+    """
+    pct = re.findall(r"%([\w.\-]+)", operand_text)
+    if pct:
+        return pct
+    names = []
+    for tok in operand_text.split(","):
+        tok = tok.strip()
+        if tok:
+            names.append(tok.split()[-1].lstrip("%"))
+    return names
 
 
 def _operand_bytes(instr: Instr, comp: Computation) -> int:
@@ -156,11 +179,7 @@ def _operand_bytes(instr: Instr, comp: Computation) -> int:
     if not om:
         return 0
     total = 0
-    for tok in om.group(1).split(","):
-        tok = tok.strip()
-        if not tok:
-            continue
-        name = tok.split()[-1].lstrip("%")
+    for name in _operand_names(om.group(1)):
         total += _parse_shape_bytes(comp.shapes.get(name, ""))
     return total
 

@@ -5,9 +5,11 @@ and associative search are MVMs streamed through 128x128 IMC tiles. The
 TPU analogue keeps the exact geometry (MXU tile == IMC array), so each
 kernel's grid size *is* the paper's cycle count (asserted in tests).
 
-  binary_mvm   — tiled bipolar projection encoding (the EM)
-  am_search    — fused similarity + running arg-max (the AM, one-shot)
-  pack_bits    — 1-bit storage format for binary AM / projection
+  binary_mvm       — tiled bipolar projection encoding (the EM)
+  am_search        — fused similarity + running arg-max (the AM, one-shot)
+  am_search_packed — the same search over the uint8-packed 1-bit AM via
+                     XOR + popcount (the deployed Table-I residence)
+  pack_bits        — 1-bit storage format for binary AM / projection
   flash_decode — one-token GQA attention streaming a KV cache (the
                  serving hot loop of the decode dry-run cells)
   ssd_chunk    — the Mamba-2 SSD per-chunk body (decay + intra/inter

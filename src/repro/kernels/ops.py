@@ -12,6 +12,9 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.am_search import am_search as _am_search
 from repro.kernels.am_search import imc_cycles_for as search_cycles
+from repro.kernels.am_search_packed import am_search_packed as _am_search_packed
+from repro.kernels.am_search_packed import imc_cycles_for as packed_search_cycles
+from repro.kernels.am_search_packed import pack_rows as _pack_rows
 from repro.kernels.binary_mvm import binary_mvm as _binary_mvm
 from repro.kernels.binary_mvm import imc_cycles_for as mvm_cycles
 from repro.kernels.pack_bits import pack_bits as _pack_bits
@@ -20,8 +23,9 @@ from repro.kernels.pack_bits import unpack_bits as _unpack_bits
 Array = jax.Array
 
 __all__ = [
-    "encode_mvm", "am_search", "pack_bits", "unpack_bits",
-    "search_cycles", "mvm_cycles", "ref",
+    "encode_mvm", "am_search", "am_search_packed", "pack_bits",
+    "unpack_bits", "pack_rows", "search_cycles", "packed_search_cycles",
+    "mvm_cycles", "ref",
 ]
 
 
@@ -50,6 +54,31 @@ def am_search(queries: Array, am: Array, *, use_kernel: bool = True,
     if not use_kernel:
         return ref.am_search(queries, am_t)
     return _am_search(queries, am_t)
+
+
+def am_search_packed(q_packed: Array, am_packed_t: Array, *, n_dims: int,
+                     mode: str = "popcount", use_kernel: bool = True,
+                     ) -> tuple[Array, Array]:
+    """Fused associative search over the packed 1-bit AM.
+
+    q_packed: (B, Dp) uint8 packed queries (``pack_rows``);
+    am_packed_t: (Dp, C) uint8 resident packed AM (``pack_rows(am).T``);
+    n_dims: true hypervector dimension D.
+
+    Returns (best_idx, best_sim) bit-exact with ``am_search`` on the
+    corresponding unpacked operands.
+    """
+    if not use_kernel:
+        return ref.am_search_packed(q_packed, am_packed_t, n_dims)
+    return _am_search_packed(q_packed, am_packed_t, n_dims=n_dims,
+                             mode=mode)
+
+
+def pack_rows(x: Array, *, use_kernel: bool = True) -> Array:
+    """(B, D) bipolar -> (B, ceil(D/8)) uint8, any D (tail bits 0)."""
+    if not use_kernel:
+        return ref.pack_rows(x)
+    return _pack_rows(x)
 
 
 def pack_bits(x: Array, *, use_kernel: bool = True) -> Array:

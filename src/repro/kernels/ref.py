@@ -57,3 +57,42 @@ def unpack_bits(packed: Array, dtype=jnp.float32) -> Array:
     shifts = jnp.arange(8, dtype=jnp.int32)
     bits = (packed.astype(jnp.int32)[:, :, None] >> shifts) & 1
     return (bits.reshape(r, cb * 8).astype(dtype) * 2 - 1)
+
+
+def pack_rows(x: Array) -> Array:
+    """(B, D) bipolar -> (B, ceil(D/8)) uint8; tail bits packed as 0."""
+    d = x.shape[-1]
+    pad = -d % 8
+    if pad:
+        x = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, pad)),
+                    constant_values=-1.0)
+    return pack_bits(x)
+
+
+def hamming_distances(q_packed: Array, am_packed_t: Array) -> Array:
+    """Popcount(XOR) distances over packed bits.
+
+    q_packed: (B, Dp) uint8; am_packed_t: (Dp, C) uint8 -> (B, C) int32.
+    """
+    x = jax.lax.bitwise_xor(
+        q_packed.astype(jnp.int32)[:, :, None],
+        am_packed_t.astype(jnp.int32)[None, :, :])  # (B, Dp, C)
+    v = x - ((x >> 1) & 0x55)
+    v = (v & 0x33) + ((v >> 2) & 0x33)
+    pc = (v + (v >> 4)) & 0x0F
+    return jnp.sum(pc, axis=1)
+
+
+def am_search_packed(q_packed: Array, am_packed_t: Array, n_dims: int,
+                     ) -> tuple[Array, Array]:
+    """Packed-domain associative search oracle.
+
+    Uses the bipolar identity dot = D - 2*hamming (tail bits pack to 0 in
+    both operands, so they cancel in the XOR). Returns the same
+    (best_idx, best_sim) as ``am_search`` on the unpacked operands.
+    """
+    ham = hamming_distances(q_packed, am_packed_t)  # (B, C)
+    sims = (n_dims - 2 * ham).astype(jnp.float32)
+    best_idx = jnp.argmax(sims, axis=-1).astype(jnp.int32)
+    best_sim = jnp.max(sims, axis=-1)
+    return best_idx, best_sim

@@ -8,6 +8,13 @@ import jax
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running training/multi-device tests "
+        "(deselect with -m 'not slow')")
+
+
 @pytest.fixture(scope="session")
 def key():
     return jax.random.key(0)
