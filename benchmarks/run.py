@@ -14,6 +14,7 @@ BENCHES = [
     ("fig7", "benchmarks.fig7_energy"),
     ("kernel", "benchmarks.kernel_bench"),
     ("packed", "benchmarks.packed_vs_unpacked"),
+    ("train_throughput", "benchmarks.train_throughput"),
     ("fig3", "benchmarks.fig3_accuracy_memory"),
     ("fig4", "benchmarks.fig4_heatmap"),
     ("fig5", "benchmarks.fig5_init"),
@@ -21,7 +22,8 @@ BENCHES = [
     ("ablation", "benchmarks.ablations"),
     ("roofline", "benchmarks.roofline_report"),
 ]
-FAST = {"table2", "fig7", "kernel", "packed", "roofline"}
+FAST = {"table2", "fig7", "kernel", "packed", "train_throughput",
+        "roofline"}
 
 
 def main() -> None:

@@ -25,6 +25,33 @@ On the 128x128 flagship below this prints a 2048-byte resident AM and
 identical accuracy to the unpacked path. For the batched serving driver
 built on this artifact see ``repro/launch/serve_memhd.py``; for the
 kernel comparison see ``benchmarks/packed_vs_unpacked.py``.
+
+Training at scale
+-----------------
+``fit`` is a device-resident engine: the training set is encoded ONCE,
+prebatched on device, and every epoch runs as a single compiled
+``lax.scan`` (one dispatch, one host sync per epoch — measured >= 5x
+the samples/sec of the old per-batch host loop; see
+``python -m benchmarks.run --only train_throughput``). Three ways to
+scale it up from the call below:
+
+* **Checkpointed fit** — pass a manager and training auto-resumes
+  bit-exactly from the newest valid checkpoint:
+
+      from repro.checkpoint import CheckpointConfig, CheckpointManager
+      ck = CheckpointManager(CheckpointConfig("/tmp/memhd_ck"))
+      model, hist = model.fit(key, x, y, ckpt=ck, ckpt_every=5)
+
+* **Data-parallel fit** — shard the batch over every device; per-shard
+  Eq.-(6) deltas sync with one bf16 all-reduce per minibatch:
+
+      model, hist = model.fit_sharded(key, x, y)   # mesh=all devices
+
+* **The fault-tolerant driver** — MEMHD is a registered arch of the
+  production train driver (atomic checkpoints, watchdog, auto-resume):
+
+      PYTHONPATH=src python -m repro.launch.train --arch memhd \\
+          --smoke --steps 20 --ckpt-dir /tmp/memhd_run
 """
 import jax
 

@@ -3,6 +3,10 @@ from repro.core.types import (  # noqa: F401
     BaselineConfig, DatasetSpec, EncoderConfig, ImcArrayConfig, MemhdConfig,
     dataset_spec,
 )
-from repro.core.memhd import DeployedMemhd, MemhdModel  # noqa: F401
+from repro.core.memhd import (  # noqa: F401
+    DeployedMemhd, MemhdModel, MemhdTrainState,
+)
 from repro.core.baselines import BaselineModel, fit_baseline  # noqa: F401
-from repro.core import am, encoding, imc, init, kmeans, qail  # noqa: F401
+from repro.core import (  # noqa: F401
+    am, encoding, evaluate, imc, init, kmeans, qail,
+)

@@ -15,6 +15,13 @@ feature of the framework rather than a side script:
 MNIST-sized dataset on the production mesh and extracts the same
 roofline terms as the LM cells — the "most representative of the paper's
 technique" row of §Perf.
+
+``make_scan_epoch_sharded`` / ``fit_sharded_epochs`` are the
+data-parallel mirror of the device-resident training engine
+(``qail.qail_epoch_scan``): the whole epoch is one jitted shard_map'd
+``lax.scan`` over prebatched minibatches — per-shard Eq.-(6) deltas,
+one bf16 psum per batch, one host sync per epoch. This is what
+``MemhdModel.fit_sharded`` runs.
 """
 from __future__ import annotations
 
@@ -134,6 +141,95 @@ def fit_distributed(mesh, model, feats: Array, labels: Array,
         for _ in range(epochs):
             state, _miss = fitted(enc, state, feats, labels)
     return dataclasses.replace(model, am_state=state)
+
+
+def make_scan_epoch_sharded(cfg: MemhdConfig, mesh, refresh_every: int = 1):
+    """Build a jit-able data-parallel scan epoch over prebatched data.
+
+    (am_state, hb, qb, yb, mask) -> (am_state, n_miss), where the
+    prebatched arrays are ``qail.prebatch`` outputs with the per-batch
+    axis sharded over every mesh axis. Inside ``shard_map`` each shard
+    runs the SAME ``lax.scan`` the single-device engine runs
+    (``qail.qail_epoch_scan`` semantics), computing its local Eq.-(6)
+    delta with ``qail_batch_delta`` and syncing with ONE bf16 psum per
+    batch; the refresh (step 4) is replicated compute, identical on all
+    shards because it consumes the psum'd float AM.
+    """
+    all_axes = tuple(mesh.axis_names)
+
+    def epoch(am_state, hb, qb, yb, mask):
+        nb = hb.shape[0]
+
+        def _refresh(args):
+            return qail.refresh_am(args[0], args[1], cfg)
+
+        def local(fp, binary, owners, hb_l, qb_l, yb_l, mb_l):
+            def body(carry, xs):
+                fp, binary = carry
+                b_idx, hx, qx, yx, mx = xs
+                st = {"fp": fp, "binary": binary, "centroid_class": owners}
+                delta, miss = qail.qail_batch_delta(
+                    st, cfg, hx, qx, yx, mask=mx)
+                delta = jax.lax.psum(delta, all_axes)  # bf16 wire
+                miss = jax.lax.psum(miss, all_axes)
+                fp = fp + delta.astype(jnp.float32)
+                fp, binary = jax.lax.cond(
+                    (b_idx + 1) % refresh_every == 0, _refresh,
+                    lambda a: a, (fp, binary))
+                return (fp, binary), miss
+
+            (fp, binary), misses = jax.lax.scan(
+                body, (fp, binary),
+                (jnp.arange(nb), hb_l, qb_l, yb_l, mb_l))
+            return fp, binary, misses.sum()
+
+        fp, binary, n_miss = _shard_map(
+            local, mesh=mesh,
+            in_specs=(P(), P(), P(), P(None, all_axes, None),
+                      P(None, all_axes, None), P(None, all_axes),
+                      P(None, all_axes)),
+            out_specs=(P(), P(), P()),
+        )(am_state["fp"], am_state["binary"], am_state["centroid_class"],
+          hb, qb, yb, mask)
+        state = dict(am_state, fp=fp, binary=binary)
+        if nb % refresh_every != 0:
+            state = qail.qail_finalize_epoch(state, cfg)
+        return state, n_miss
+
+    return epoch
+
+
+def fit_sharded_epochs(mesh, am_state, cfg: MemhdConfig,
+                       hb: Array, qb: Array, yb: Array, mask: Array,
+                       *, epochs: int, refresh_every: int = 1,
+                       n_samples: Optional[int] = None):
+    """Run ``epochs`` data-parallel scan epochs; one host sync per epoch.
+
+    Returns (am_state, curve). The prebatched arrays are device_put with
+    the per-batch axis sharded over the whole mesh; the AM is replicated.
+    """
+    n = n_samples if n_samples is not None else int(mask.sum())
+    epoch = make_scan_epoch_sharded(cfg, mesh, refresh_every)
+    repl = NamedSharding(mesh, P())
+    ba = tuple(mesh.axis_names)
+    sh_b2 = NamedSharding(mesh, P(None, ba))
+    sh_b3 = NamedSharding(mesh, P(None, ba, None))
+    am_sh = {"fp": repl, "binary": repl, "centroid_class": repl}
+    with mesh:
+        fitted = jax.jit(epoch,
+                         in_shardings=(am_sh, sh_b3, sh_b3, sh_b2, sh_b2),
+                         out_shardings=(am_sh, None))
+        hb = jax.device_put(hb, sh_b3)
+        qb = jax.device_put(qb, sh_b3)
+        yb = jax.device_put(yb, sh_b2)
+        mask = jax.device_put(mask, sh_b2)
+        state = jax.device_put(am_state, am_sh)
+        curve = []
+        for ep in range(1, epochs + 1):
+            state, n_miss = fitted(state, hb, qb, yb, mask)
+            curve.append({"epoch": ep,
+                          "train_miss": float(n_miss) / n})  # 1 sync/epoch
+    return state, curve
 
 
 def make_inference_fn(enc_cfg: EncoderConfig, am_cfg: MemhdConfig):

@@ -1,0 +1,69 @@
+"""One evaluator for every accuracy loop in the repo.
+
+Replaces the three copy-pasted host-side loops (``memhd._batched_accuracy``,
+``qail.evaluate``, ``DeployedMemhd.score``). Two properties matter:
+
+* **Padded final batch** — the ragged tail is padded up to the batch
+  size (padded labels are -1, which no class id can match), so every
+  jitted predict function underneath sees exactly ONE input shape and
+  ragged tails stop triggering recompiles.
+* **Device-side accumulation** — per-batch correct-counts stay on device
+  and are summed there; the only host pull is the final ``int()``.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import am as am_lib
+
+Array = jax.Array
+
+_count_correct = jax.jit(
+    lambda pred, labels: jnp.sum((pred == labels).astype(jnp.int32)))
+
+# Shared jitted AM prediction (binary AM + ownership lookup); cached
+# across callers so repeated evaluations at the same geometry reuse one
+# executable.
+_am_predict = jax.jit(am_lib.predict)
+
+
+def batched_accuracy(predict_fn: Callable[[Array], Array],
+                     inputs: Array, labels: Array,
+                     batch: int = 4096) -> float:
+    """Accuracy of ``predict_fn`` over (inputs, labels), batched + padded.
+
+    ``predict_fn`` maps a (batch, ...) input block to (batch,) int class
+    predictions. The final ragged block is padded by repeating its last
+    row (padded labels are -1, so padded rows can never count as
+    correct); correct-counts accumulate on device and are pulled once.
+    """
+    n = int(inputs.shape[0])
+    if n == 0:
+        return 0.0
+    bs = min(batch, n)
+    counts = []
+    for b in range(0, n, bs):
+        x = inputs[b:b + bs]
+        y = labels[b:b + bs]
+        k = int(x.shape[0])
+        if k < bs:  # pad the ragged tail to the uniform batch shape
+            reps = jnp.broadcast_to(x[-1:], (bs - k,) + tuple(x.shape[1:]))
+            x = jnp.concatenate([x, reps], axis=0)
+            y = jnp.concatenate(
+                [y, jnp.full((bs - k,), -1, y.dtype)])
+        counts.append(_count_correct(predict_fn(x), y))
+    total = counts[0]
+    for c in counts[1:]:
+        total = total + c
+    return int(total) / n
+
+
+def am_accuracy(state, queries: Array, labels: Array,
+                batch: int = 4096) -> float:
+    """Accuracy of an AM state dict on pre-encoded (queries, labels)."""
+    binary, owners = state["binary"], state["centroid_class"]
+    return batched_accuracy(lambda q: _am_predict(binary, owners, q),
+                            queries, labels, batch=batch)

@@ -3,23 +3,35 @@
 This is the public, paper-faithful pipeline (Fig. 2):
 
     model  = MemhdModel.create(key, enc_cfg, am_cfg)
-    model, hist = model.fit(feats, labels)           # (a)-(c) of Fig. 2
-    acc    = model.score(test_feats, test_labels)    # (d) in-memory inference
+    model, hist = model.fit(key, feats, labels)       # (a)-(c) of Fig. 2
+    acc    = model.score(test_feats, test_labels)     # (d) in-memory inference
 
 ``MemhdModel`` is an immutable pytree-of-arrays + static configs, so it
 jits, shards, and checkpoints like any other model in the framework.
+
+Training at scale
+-----------------
+``fit`` encodes the training set ONCE and runs every epoch as a single
+compiled ``lax.scan`` (``qail.qail_epoch_scan``) — one dispatch and one
+host sync per epoch. Pass ``ckpt=CheckpointManager(...)`` and the fit
+checkpoints a ``MemhdTrainState`` every ``ckpt_every`` epochs and
+auto-resumes bit-exactly from the newest valid one; the fault-tolerant
+driver (``repro.launch.train --arch memhd``) builds on exactly this
+path. ``fit_sharded`` runs the same scan epochs data-parallel over a
+device mesh (per-shard Eq.-(6) deltas, one bf16 all-reduce per batch).
 """
 from __future__ import annotations
 
 import dataclasses
 import logging
+from functools import partial
 from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import am as am_lib
-from repro.core import encoding, init as init_lib, qail
+from repro.core import encoding, evaluate as eval_lib, init as init_lib, qail
 from repro.core.imc import ImcArrayConfig, memhd_pipeline
 from repro.core.types import EncoderConfig, MemhdConfig
 
@@ -27,21 +39,47 @@ Array = jax.Array
 log = logging.getLogger(__name__)
 
 
-def _batched_accuracy(predict_fn, feats: Array, labels: Array,
-                      batch: int) -> float:
-    n = feats.shape[0]
-    correct = 0
-    for b in range(0, n, batch):
-        pred = predict_fn(feats[b:b + batch])
-        correct += int(jnp.sum(pred == labels[b:b + batch]))
-    return correct / n
-
-
 def _imc_cost(enc_cfg: EncoderConfig, am_cfg: MemhdConfig,
               arr: ImcArrayConfig | None):
     arr = arr or ImcArrayConfig()
     return memhd_pipeline(enc_cfg.features, am_cfg.dim, am_cfg.columns,
                           arr)
+
+
+@partial(jax.jit, static_argnames=("enc_cfg",))
+def _predict_feats(enc_params, enc_cfg: EncoderConfig, binary: Array,
+                   centroid_class: Array, feats: Array) -> Array:
+    """encode_query + associative search, one cached executable."""
+    q = encoding.encode_query(enc_params, enc_cfg, feats)
+    return am_lib.predict(binary, centroid_class, q)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MemhdTrainState:
+    """Checkpointable training state: AM buffers + epoch counter.
+
+    A plain pytree (both fields are array leaves), so it flows through
+    ``checkpoint.CheckpointManager`` unchanged — the driver's atomic
+    save / verified restore / keep-k machinery applies as-is.
+    """
+
+    am_state: Dict[str, Array]
+    epoch: Array  # () int32
+
+    def tree_flatten(self):
+        return (self.am_state, self.epoch), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        am_state, epoch = children
+        return cls(am_state, epoch)
+
+    @classmethod
+    def create(cls, am_state: Dict[str, Array],
+               epoch: int = 0) -> "MemhdTrainState":
+        return cls(am_state, jnp.asarray(epoch, jnp.int32))
 
 
 @jax.tree_util.register_pytree_node_class
@@ -88,10 +126,19 @@ class MemhdModel:
 
     def initialize_am(self, key: Array, feats: Array, labels: Array,
                       *, method: str = "clustering",
+                      h: Optional[Array] = None,
+                      q: Optional[Array] = None,
                       ) -> Tuple["MemhdModel", List[dict]]:
-        """Clustering-based (or random-sampling baseline) AM init (§III-A)."""
-        h = self.encode(feats)
-        q = encoding.binarize_query(h)
+        """Clustering-based (or random-sampling baseline) AM init (§III-A).
+
+        Pass pre-encoded ``h`` / ``q`` to reuse an existing encode of
+        ``feats`` (``fit`` does — the training set is encoded exactly
+        once per fit, not once for init and again for the epochs).
+        """
+        if h is None:
+            h = self.encode(feats)
+        if q is None:
+            q = encoding.binarize_query(h)
         if method == "clustering":
             fp, owners, history = init_lib.clustering_init(
                 key, self.am_cfg, h, labels, queries=q)
@@ -108,52 +155,144 @@ class MemhdModel:
             *, init_method: str = "clustering",
             epochs: Optional[int] = None,
             mode: str = "batched",
+            refresh_every: int = 1,
             eval_feats: Optional[Array] = None,
             eval_labels: Optional[Array] = None,
+            ckpt=None, ckpt_every: int = 1,
+            use_kernel: bool = False,
             ) -> Tuple["MemhdModel", Dict]:
-        """Full training pipeline: init + QAIL epochs.
+        """Full training pipeline: init + scan-compiled QAIL epochs.
+
+        The training set is encoded ONCE; both the clustering init and
+        every epoch reuse the same device-resident ``h``/``q``/prebatched
+        buffers. Each ``batched``-mode epoch is a single
+        ``qail_epoch_scan`` dispatch — one host sync per epoch (the
+        ``float(miss)`` for the history record).
+
+        Args:
+          refresh_every: binary-AM refresh cadence inside the epoch scan
+            (1 = per batch; larger trades fidelity for fewer
+            binarization passes).
+          ckpt: optional ``checkpoint.CheckpointManager``. When given,
+            fit auto-resumes from the newest valid ``MemhdTrainState``
+            (bit-exact continuation) and checkpoints every ``ckpt_every``
+            epochs plus at the end.
+          use_kernel: route the epoch's inner step through the Pallas
+            ``qail_update`` kernel.
 
         Returns (model, history) where history holds per-epoch train miss
         rates and (optional) eval accuracies — consumed by the Fig.-5/6
         benchmarks.
         """
         epochs = self.am_cfg.epochs if epochs is None else epochs
-        model, init_hist = self.initialize_am(
-            key, feats, labels, method=init_method)
 
-        h = model.encode(feats)
+        # Encode once; init and every epoch share these buffers.
+        h = self.encode(feats)
         q = encoding.binarize_query(h)
+
+        start_epoch = 0
+        init_hist: List[dict] = []
+        curve: List[dict] = []
+        state = None
+        resumed = False
+        if ckpt is not None:
+            template = MemhdTrainState.create(self.am_state)
+            step, tree, extra = ckpt.restore(template)
+            if step is not None:
+                state = jax.tree.map(jnp.asarray, tree.am_state)
+                start_epoch = step
+                curve = list(extra.get("curve", []))
+                init_hist = list(extra.get("init", []))
+                resumed = True
+                log.info("fit resumed from epoch %d", start_epoch)
+
+        if state is None:
+            model, init_hist = self.initialize_am(
+                key, feats, labels, method=init_method, h=h, q=q)
+            state = model.am_state
+        else:
+            model = dataclasses.replace(self, am_state=state)
+
         eval_q = (model.encode_query(eval_feats)
                   if eval_feats is not None else None)
 
-        curve: List[dict] = []
-        state = model.am_state
-        if eval_q is not None:
-            acc0 = qail.evaluate(state, eval_q, eval_labels)
-            curve.append({"epoch": 0, "eval_acc": acc0})
-        for ep in range(1, epochs + 1):
+        def _save(ep, st):
+            if ckpt is not None:
+                ckpt.save(ep, MemhdTrainState.create(st, ep),
+                          extra={"curve": curve, "init": init_hist})
+
+        if start_epoch == 0 and not resumed:
+            if eval_q is not None:
+                acc0 = qail.evaluate(state, eval_q, eval_labels)
+                curve.append({"epoch": 0, "eval_acc": acc0})
+            _save(0, state)
+
+        if mode == "batched":
+            n = h.shape[0]
+            hb, qb, yb, mask = qail.prebatch(h, q, labels,
+                                             self.am_cfg.batch_size)
+        for ep in range(start_epoch + 1, epochs + 1):
             if mode == "sequential":
                 state = qail.qail_epoch_sequential(
                     state, self.am_cfg, h, q, labels)
                 miss = float("nan")
             else:
-                state, miss = qail.qail_epoch_batched(
-                    state, self.am_cfg, h, q, labels)
+                state, n_miss = qail.qail_epoch_scan(
+                    state, self.am_cfg, hb, qb, yb, mask,
+                    refresh_every=refresh_every, use_kernel=use_kernel)
+                miss = float(n_miss) / n  # the ONE host sync this epoch
             rec = {"epoch": ep, "train_miss": miss}
             if eval_q is not None:
                 rec["eval_acc"] = qail.evaluate(state, eval_q, eval_labels)
             curve.append(rec)
+            if ep % ckpt_every == 0 or ep == epochs:
+                _save(ep, state)
+        model = dataclasses.replace(model, am_state=state)
+        return model, {"init": init_hist, "curve": curve}
+
+    def fit_sharded(self, key: Array, feats: Array, labels: Array,
+                    *, mesh=None, epochs: Optional[int] = None,
+                    init_method: str = "clustering",
+                    refresh_every: int = 1,
+                    ) -> Tuple["MemhdModel", Dict]:
+        """Data-parallel fit: scan-compiled epochs under ``shard_map``.
+
+        The batch axis of every prebatched minibatch shards over the
+        mesh; each shard computes its Eq.-(6) delta (``qail_batch_delta``)
+        and the shards sync with ONE bf16 all-reduce per batch (the
+        wire-dtype machinery of §Perf Q2). The AM is replicated — it is
+        the model, and it is tiny by construction.
+        """
+        from repro.core import distributed
+
+        if mesh is None:
+            mesh = jax.make_mesh((jax.device_count(),), ("data",))
+        epochs = self.am_cfg.epochs if epochs is None else epochs
+
+        h = self.encode(feats)
+        q = encoding.binarize_query(h)
+        model, init_hist = self.initialize_am(
+            key, feats, labels, method=init_method, h=h, q=q)
+
+        n = h.shape[0]
+        n_shards = int(mesh.devices.size)
+        bs = -(-self.am_cfg.batch_size // n_shards) * n_shards
+        hb, qb, yb, mask = qail.prebatch(h, q, labels, bs)
+
+        state, curve = distributed.fit_sharded_epochs(
+            mesh, model.am_state, self.am_cfg, hb, qb, yb, mask,
+            epochs=epochs, refresh_every=refresh_every, n_samples=n)
         model = dataclasses.replace(model, am_state=state)
         return model, {"init": init_hist, "curve": curve}
 
     # -- inference ---------------------------------------------------------------
     def predict(self, feats: Array) -> Array:
-        q = self.encode_query(feats)
-        return am_lib.predict(self.am_state["binary"],
-                              self.am_state["centroid_class"], q)
+        return _predict_feats(self.enc_params, self.enc_cfg,
+                              self.am_state["binary"],
+                              self.am_state["centroid_class"], feats)
 
     def score(self, feats: Array, labels: Array, batch: int = 4096) -> float:
-        return _batched_accuracy(self.predict, feats, labels, batch)
+        return eval_lib.batched_accuracy(self.predict, feats, labels, batch)
 
     # -- deployment --------------------------------------------------------------
     def deploy(self, *, packed: bool = True, mode: str = "popcount",
@@ -249,7 +388,7 @@ class DeployedMemhd:
 
     def score(self, feats: Array, labels: Array, batch: int = 4096,
               ) -> float:
-        return _batched_accuracy(self.predict, feats, labels, batch)
+        return eval_lib.batched_accuracy(self.predict, feats, labels, batch)
 
     # -- deployment accounting -------------------------------------------------
     @property

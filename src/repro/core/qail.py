@@ -12,21 +12,28 @@ The four steps per training sample, verbatim from the paper:
 4. *Binary AM update* — per-centroid normalization of the float AM (so no
    centroid dominates) followed by re-binarization (mean threshold).
 
-Two implementations:
+Three implementations:
 
 * ``qail_epoch_sequential`` — exact paper semantics: one sample at a time
   (``lax.scan``), the binary AM refreshed once per epoch (step 4 happens
   at epoch granularity, matching "iterative learning ... across the entire
   training dataset" + a normalization step per pass).
-* ``qail_epoch_batched`` — minibatched variant for data-parallel
-  execution: updates within a batch are computed against the same binary
-  AM snapshot and scatter-added. This is the variant the distributed
-  trainer shards with pjit; tests check it tracks the sequential variant.
+* ``qail_epoch_scan`` — the device-resident training engine: one
+  jit-compiled ``lax.scan`` over a *pre-batched* epoch (``prebatch``),
+  with the ``refresh_every`` binary-AM refresh folded into the scan as a
+  ``lax.cond``. ONE dispatch and (at most) one host sync per epoch —
+  this is what ``MemhdModel.fit``, ``fit_sharded`` and the fault-tolerant
+  driver run. ``qail_epoch_batched`` is its convenience wrapper over
+  unbatched arrays.
+* ``qail_epoch_hostloop`` — the pre-refactor host-side Python loop (one
+  jit dispatch + one device sync per minibatch). Kept as the measured
+  baseline for ``benchmarks/train_throughput.py`` and as a parity oracle
+  for the scan engine; new code should not call it.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +43,14 @@ from repro.core.types import MemhdConfig
 
 Array = jax.Array
 AmState = Dict[str, Array]
+
+# Buffer donation only helps (and only works) on accelerator backends;
+# on CPU it just emits "donation not usable" warnings.
+_DONATE = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+
+# Incremented each time the scan-epoch body is *traced* (not executed).
+# The single-host-sync test asserts a multi-epoch fit traces it once.
+_scan_trace_count = 0
 
 
 def _normalize_fp(fp_am: Array, mode: str) -> Array:
@@ -128,6 +143,7 @@ def qail_epoch_sequential(state: AmState, cfg: MemhdConfig,
 def qail_batch_delta(state: AmState, cfg: MemhdConfig,
                      h: Array, queries: Array, labels: Array,
                      wire_dtype=jnp.bfloat16,
+                     mask: Optional[Array] = None,
                      ) -> Tuple[Array, Array]:
     """Eq.-(6) update *delta* for a batch (no state mutation).
 
@@ -137,6 +153,9 @@ def qail_batch_delta(state: AmState, cfg: MemhdConfig,
     emitted in ``wire_dtype`` — under GSPMD the all-reduce operand is the
     scatter output, so this is what sets the wire format (§Perf Q2: one
     bf16 reduce instead of two f32 ones, 8x fewer bytes).
+
+    ``mask`` (B,) zeroes padded samples so pre-batched epochs with a
+    ragged final batch (``prebatch``) stay exact.
     """
     centroid_class = state["centroid_class"]
     binary = state["binary"]
@@ -146,6 +165,8 @@ def qail_batch_delta(state: AmState, cfg: MemhdConfig,
     pred_t = jnp.argmax(sims, axis=-1)
     pred_class = centroid_class[pred_t]
     mis = (pred_class != labels).astype(jnp.float32)
+    if mask is not None:
+        mis = mis * mask
 
     neg = jnp.finfo(sims.dtype).min
     own = centroid_class[None, :] == labels[:, None]
@@ -188,26 +209,165 @@ def qail_batch_update(state: AmState, cfg: MemhdConfig,
     return dict(state, fp=fp), mis.sum()
 
 
+def refresh_am(fp: Array, binary: Array, cfg: MemhdConfig,
+               ) -> Tuple[Array, Array]:
+    """Step 4 (normalize + re-binarize) on raw AM buffers.
+
+    The ONE implementation of the binary-AM refresh; the epoch finalize,
+    the in-scan ``refresh_every`` cond, and the sharded engine all call
+    this so their step-4 semantics cannot diverge.
+    """
+    del binary
+    fp = _normalize_fp(fp, cfg.normalize)
+    return fp, am_lib.binarize_am(fp, cfg.threshold)
+
+
 @partial(jax.jit, static_argnames=("cfg",))
 def qail_finalize_epoch(state: AmState, cfg: MemhdConfig) -> AmState:
     """Step 4 (normalize + re-binarize) for the batched variant."""
-    fp = _normalize_fp(state["fp"], cfg.normalize)
-    return dict(state, fp=fp, binary=am_lib.binarize_am(fp, cfg.threshold))
+    fp, binary = refresh_am(state["fp"], state["binary"], cfg)
+    return dict(state, fp=fp, binary=binary)
+
+
+# ---------------------------------------------------------------------------
+# Device-resident scan engine
+# ---------------------------------------------------------------------------
+
+def prebatch(h: Array, q: Array, labels: Array, batch_size: int,
+             ) -> Tuple[Array, Array, Array, Array]:
+    """Reshape an epoch's data into device-resident minibatches.
+
+    Pads n up to a multiple of ``batch_size`` (padded samples carry
+    label -1 and mask 0, so they can never fire an Eq.-(6) update) and
+    returns ``(hb, qb, yb, mask)`` shaped ``(n_batches, batch_size, ...)``
+    — the scan axis of ``qail_epoch_scan``. Do this ONCE per fit; the
+    same batched arrays serve every epoch.
+    """
+    n = h.shape[0]
+    nb = -(-n // batch_size)
+    pad = nb * batch_size - n
+    mask = jnp.concatenate([jnp.ones((n,), jnp.float32),
+                            jnp.zeros((pad,), jnp.float32)])
+    hb = jnp.pad(h, ((0, pad), (0, 0)))
+    qb = jnp.pad(q, ((0, pad), (0, 0)))
+    yb = jnp.pad(labels.astype(jnp.int32), (0, pad), constant_values=-1)
+    d = h.shape[1]
+    return (hb.reshape(nb, batch_size, d), qb.reshape(nb, batch_size, d),
+            yb.reshape(nb, batch_size), mask.reshape(nb, batch_size))
+
+
+@partial(jax.jit, static_argnames=("cfg", "refresh_every", "use_kernel"),
+         donate_argnums=_DONATE)
+def qail_epoch_scan(state: AmState, cfg: MemhdConfig,
+                    hb: Array, qb: Array, yb: Array, mask: Array,
+                    *, refresh_every: int = 1,
+                    use_kernel: bool = False,
+                    ) -> Tuple[AmState, Array]:
+    """One QAIL epoch as a single compiled ``lax.scan`` over minibatches.
+
+    The whole epoch — sims MVM, Eq.-(4)/(5) target selection, Eq.-(6)
+    scatter, and every mid-epoch binary refresh — runs device-resident in
+    one dispatch. The AM buffers are donated on accelerator backends, so
+    epoch N+1 trains in-place over epoch N's memory — this call CONSUMES
+    ``state`` there (the ``state = qail_epoch_scan(state, ...)`` chain is
+    the intended use; callers that must keep the old state alive should
+    copy it first, or go through ``qail_epoch_batched`` which does).
+
+    Args:
+      state: AM state dict (fp, binary, centroid_class).
+      cfg: MEMHD config (static).
+      hb / qb / yb / mask: ``prebatch`` outputs, shape (n_batches, bs, ...).
+      refresh_every: run step 4 (normalize + re-binarize) inside the scan
+        every this-many batches. If the last batch refreshed, the epoch
+        ends there — no redundant trailing finalize (the pre-refactor
+        host loop double-finalized when n_batches % refresh_every == 0).
+      use_kernel: route the fused inner step through the Pallas
+        ``qail_update`` kernel (TPU; interpret elsewhere) instead of the
+        pure-jnp scatter path. Both are oracle-checked against each other
+        in tests/test_qail_engine.py.
+
+    Returns:
+      (state, n_miss) — n_miss is a DEVICE scalar; pulling it is the
+      caller's one permitted host sync per epoch.
+    """
+    global _scan_trace_count
+    _scan_trace_count += 1
+
+    centroid_class = state["centroid_class"]
+    nb = hb.shape[0]
+
+    def _refresh(args):
+        return refresh_am(args[0], args[1], cfg)
+
+    def body(carry, xs):
+        fp, binary = carry
+        b_idx, hx, qx, yx, mx = xs
+        upd = hx if cfg.update_with == "encoded" else qx
+        if use_kernel:
+            from repro.kernels import ops
+            delta, miss = ops.qail_update(
+                qx, upd, binary.T, centroid_class, yx, mx, lr=cfg.lr)
+            fp = fp + delta
+        else:
+            sims = qx @ binary.T  # (bs, C)
+            pred_t = jnp.argmax(sims, axis=-1)
+            mis = (centroid_class[pred_t] != yx).astype(jnp.float32) * mx
+            neg = jnp.finfo(sims.dtype).min
+            own = centroid_class[None, :] == yx[:, None]
+            true_t = jnp.argmax(jnp.where(own, sims, neg), axis=-1)
+            coef = (cfg.lr * mis)[:, None] * upd
+            fp = fp.at[true_t].add(coef)
+            fp = fp.at[pred_t].add(-coef)
+            miss = mis.sum()
+        fp, binary = jax.lax.cond(
+            (b_idx + 1) % refresh_every == 0, _refresh, lambda a: a,
+            (fp, binary))
+        return (fp, binary), miss
+
+    (fp, binary), misses = jax.lax.scan(
+        body, (state["fp"], state["binary"]),
+        (jnp.arange(nb), hb, qb, yb, mask))
+    state = dict(state, fp=fp, binary=binary)
+    if nb % refresh_every != 0:  # last batch didn't refresh inside scan
+        state = qail_finalize_epoch(state, cfg)
+    return state, misses.sum()
 
 
 def qail_epoch_batched(state: AmState, cfg: MemhdConfig,
                        h: Array, queries: Array, labels: Array,
-                       *, refresh_every: int = 1) -> Tuple[AmState, float]:
-    """One epoch of minibatched QAIL over a full (host-resident) dataset.
+                       *, refresh_every: int = 1,
+                       use_kernel: bool = False,
+                       ) -> Tuple[AmState, Array]:
+    """One scan-compiled epoch over unbatched (n, D) arrays.
 
-    Args:
-      refresh_every: refresh the binary AM every this-many batches
-        (1 = per batch, closest to sequential semantics; larger values
-        trade fidelity for fewer binarization passes — measured in
-        tests/test_qail.py).
+    Convenience wrapper: ``prebatch`` + ``qail_epoch_scan``. Callers that
+    run many epochs (fit, the train driver) should prebatch once and call
+    ``qail_epoch_scan`` directly. Unlike the raw engine, this wrapper
+    does NOT consume ``state`` — on donating backends it hands the scan a
+    copy, so ad-hoc callers (tests, notebooks) can keep reusing theirs.
 
     Returns:
-      (state, miss_rate) — miss rate across the epoch (pre-update AMs).
+      (state, miss_rate) — miss rate is a device scalar (pre-update AMs).
+    """
+    n = h.shape[0]
+    hb, qb, yb, mask = prebatch(h, queries, labels, cfg.batch_size)
+    if _DONATE:
+        state = jax.tree.map(jnp.copy, state)
+    state, n_miss = qail_epoch_scan(state, cfg, hb, qb, yb, mask,
+                                    refresh_every=refresh_every,
+                                    use_kernel=use_kernel)
+    return state, n_miss / n
+
+
+def qail_epoch_hostloop(state: AmState, cfg: MemhdConfig,
+                        h: Array, queries: Array, labels: Array,
+                        *, refresh_every: int = 1) -> Tuple[AmState, float]:
+    """Pre-refactor host-side epoch loop (one dispatch + sync PER BATCH).
+
+    Kept as the measured baseline of benchmarks/train_throughput.py and
+    as a semantics oracle for ``qail_epoch_scan`` (which it must match —
+    the former double finalize at epoch end when
+    ``n_batches % refresh_every == 0`` is fixed in both).
     """
     n = h.shape[0]
     bs = cfg.batch_size
@@ -217,20 +377,16 @@ def qail_epoch_batched(state: AmState, cfg: MemhdConfig,
         sl = slice(b * bs, min((b + 1) * bs, n))
         state, miss = qail_batch_update(
             state, cfg, h[sl], queries[sl], labels[sl])
-        total_miss += float(miss)
+        total_miss += float(miss)  # <- the per-batch host sync
         if (b + 1) % refresh_every == 0:
             state = qail_finalize_epoch(state, cfg)
-    state = qail_finalize_epoch(state, cfg)
+    if n_batches % refresh_every != 0:
+        state = qail_finalize_epoch(state, cfg)
     return state, total_miss / n
 
 
 def evaluate(state: AmState, queries: Array, labels: Array,
              batch: int = 4096) -> float:
     """Classification accuracy of the binary AM on (queries, labels)."""
-    n = queries.shape[0]
-    correct = 0
-    for b in range(0, n, batch):
-        pred = am_lib.predict(state["binary"], state["centroid_class"],
-                              queries[b:b + batch])
-        correct += int(jnp.sum(pred == labels[b:b + batch]))
-    return correct / n
+    from repro.core import evaluate as eval_lib
+    return eval_lib.am_accuracy(state, queries, labels, batch=batch)

@@ -18,6 +18,7 @@ benchmarks can annotate which mode produced each number.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import logging
 import os
 from typing import Optional
@@ -87,7 +88,13 @@ def synthesize(name: str, spec: DatasetSpec, seed: int = 0,
     """
     tr_n = train_per_class or spec.train_per_class
     te_n = test_per_class or spec.test_per_class
-    rng = np.random.default_rng(seed + hash(name) % (2**16))
+    # Stable per-name salt: python's hash() is randomized per process
+    # (PYTHONHASHSEED), which silently broke cross-restart determinism —
+    # the train driver's bit-exact resume needs the same bytes after a
+    # crash as before it.
+    name_salt = int.from_bytes(
+        hashlib.sha256(name.encode()).digest()[:2], "little")
+    rng = np.random.default_rng(seed + name_salt)
     f, k, m = spec.features, spec.classes, spec.latent_modes
 
     # Templates: class-common + per-mode; sparse positive structure like

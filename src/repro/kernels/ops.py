@@ -19,13 +19,14 @@ from repro.kernels.binary_mvm import binary_mvm as _binary_mvm
 from repro.kernels.binary_mvm import imc_cycles_for as mvm_cycles
 from repro.kernels.pack_bits import pack_bits as _pack_bits
 from repro.kernels.pack_bits import unpack_bits as _unpack_bits
+from repro.kernels.qail_update import qail_update as _qail_update
 
 Array = jax.Array
 
 __all__ = [
     "encode_mvm", "am_search", "am_search_packed", "pack_bits",
-    "unpack_bits", "pack_rows", "search_cycles", "packed_search_cycles",
-    "mvm_cycles", "ref",
+    "unpack_bits", "pack_rows", "qail_update", "search_cycles",
+    "packed_search_cycles", "mvm_cycles", "ref",
 ]
 
 
@@ -91,6 +92,21 @@ def unpack_bits(p: Array, *, use_kernel: bool = True) -> Array:
     if not use_kernel:
         return ref.unpack_bits(p)
     return _unpack_bits(p)
+
+
+def qail_update(q: Array, upd: Array, am_t: Array, centroid_class: Array,
+                labels: Array, mask: Array, *, lr: float,
+                use_kernel: bool = True) -> tuple[Array, Array]:
+    """Fused QAIL inner step (§III-C): sims MVM + Eq. 4/5 + Eq.-(6) delta.
+
+    q/upd: (B, D); am_t: (D, C) transposed binary AM; labels/mask: (B,).
+    Returns (delta (C, D) float32, n_miss float32) — the Eq.-(6) shadow-AM
+    increment for one minibatch, bit-exact between kernel and oracle.
+    """
+    if not use_kernel:
+        return ref.qail_update_delta(q, upd, am_t, centroid_class,
+                                     labels, mask, lr)
+    return _qail_update(q, upd, am_t, centroid_class, labels, mask, lr=lr)
 
 
 def predict_classes(queries: Array, am: Array, centroid_class: Array,

@@ -1,0 +1,153 @@
+"""Fused QAIL inner-step Pallas kernel: sims MVM + Eq.-(4)/(5) + Eq.-(6).
+
+The training hot loop of the paper (§III-C): each minibatch computes the
+similarity of its binarized queries against the binary AM, selects the
+push-away (Eq. 4, global argmax) and pull-toward (Eq. 5, true-class
+argmax) centroids for every mispredicted sample, and emits the Eq.-(6)
+delta for the float shadow AM. Unfused, that is a matmul, two argmax
+reductions, two gathers, and a scatter — five HBM round-trips of (B, C)
+similarities and (C, D) deltas per batch.
+
+Here the whole step is ONE VMEM-resident pass: the grid walks query
+blocks only, with the transposed binary AM, the update payload and the
+(C, D) delta accumulator resident in VMEM across steps. Scatter-free by
+construction — target selection becomes a one-hot selection matrix W
+(B, C) with W[i] = lr*mis_i*(onehot(true) - onehot(pred)), and the delta
+is the MXU matmul W^T @ upd accumulated over query blocks. The miss
+count rides along in a (1, 1) accumulator, so training needs no second
+pass to know its error rate.
+
+Padded columns are masked to -inf before both argmaxes (they can never
+be selected); padded rows carry mask 0 and label -1 (their W row is
+zero); padded D columns contribute zero delta. Ties resolve first-wins,
+matching ``jnp.argmax`` and ``kernels.ref.qail_update_delta``, the
+bit-exact oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+TILE = 128
+
+
+def _make_kernel(n_valid_cols: int, lr: float):
+    """Bind the static valid-column count and learning rate."""
+
+    def kernel(q_ref, upd_ref, am_ref, own_ref, y_ref, mask_ref,
+               delta_ref, miss_ref):
+        b, nb = pl.program_id(0), pl.num_programs(0)
+
+        @pl.when(b == 0)
+        def _init():
+            delta_ref[...] = jnp.zeros_like(delta_ref)
+            miss_ref[...] = jnp.zeros_like(miss_ref)
+
+        sims = jnp.dot(q_ref[...].astype(jnp.float32),
+                       am_ref[...].astype(jnp.float32),
+                       preferred_element_type=jnp.float32)  # (bB, C)
+        col = jax.lax.broadcasted_iota(jnp.int32, sims.shape, 1)
+        valid = col < n_valid_cols
+        neg = jnp.finfo(jnp.float32).min
+        sims = jnp.where(valid, sims, neg)
+
+        owners = own_ref[...]          # (1, C) int32, padded cols = -1
+        labels = y_ref[...]            # (bB, 1) int32, padded rows = -1
+
+        # Eq. (4): global argmax -> push-away target, one-hot on C.
+        pred_t = jnp.argmax(sims, axis=1)  # (bB,)
+        pred_hot = col == pred_t[:, None]  # (bB, C)
+        pred_class = jnp.sum(jnp.where(pred_hot, owners, 0), axis=1)
+
+        # Eq. (5): argmax within the true class -> pull-toward target.
+        own_mask = (owners == labels) & valid  # (bB, C)
+        true_t = jnp.argmax(jnp.where(own_mask, sims, neg), axis=1)
+        true_hot = col == true_t[:, None]
+
+        mis = ((pred_class != labels[:, 0]).astype(jnp.float32)
+               * mask_ref[...][:, 0])  # (bB,)
+
+        # Eq. (6) as a selection matmul: delta += W^T @ upd on the MXU.
+        w = (lr * mis)[:, None] * (true_hot.astype(jnp.float32)
+                                   - pred_hot.astype(jnp.float32))
+        delta_ref[...] += jnp.dot(w.T, upd_ref[...].astype(jnp.float32),
+                                  preferred_element_type=jnp.float32)
+        miss_ref[0, 0] += jnp.sum(mis)
+        del nb
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "block_b", "interpret"))
+def qail_update(q: Array, upd: Array, am_t: Array, centroid_class: Array,
+                labels: Array, mask: Array, *, lr: float,
+                block_b: int = 256,
+                interpret: bool | None = None) -> tuple[Array, Array]:
+    """Fused QAIL inner step for one minibatch.
+
+    Args:
+      q: (B, D) binarized queries H^b.
+      upd: (B, D) Eq.-(6) update payload (encoded H or H^b).
+      am_t: (D, C) transposed binary AM (column c = centroid c).
+      centroid_class: (C,) int centroid ownership.
+      labels: (B,) int true labels (-1 marks padded rows).
+      mask: (B,) float {0, 1} sample validity.
+      lr: iterative-learning rate alpha (static).
+      block_b: query-block tile height (grid walks B only; AM, payload
+        and the (C, D) delta stay VMEM-resident across blocks).
+      interpret: force Pallas interpret mode (defaults to True off-TPU).
+
+    Returns:
+      (delta, n_miss): (C, D) float32 Eq.-(6) AM increment and the
+      scalar float32 count of mispredicted (masked) samples. Bit-exact
+      vs ``kernels.ref.qail_update_delta``.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, dd = q.shape
+    dd2, c = am_t.shape
+    assert dd == dd2, (q.shape, am_t.shape)
+    assert upd.shape == q.shape, (upd.shape, q.shape)
+
+    bb = min(block_b, max(b, 1))
+    pb = -b % bb
+    pd = -dd % TILE
+    pc = -c % TILE
+    qp = jnp.pad(q.astype(jnp.float32), ((0, pb), (0, pd)))
+    up = jnp.pad(upd.astype(jnp.float32), ((0, pb), (0, pd)))
+    ap = jnp.pad(am_t.astype(jnp.float32), ((0, pd), (0, pc)))
+    ownp = jnp.pad(centroid_class.astype(jnp.int32), (0, pc),
+                   constant_values=-1)[None, :]
+    yp = jnp.pad(labels.astype(jnp.int32), (0, pb),
+                 constant_values=-1)[:, None]
+    mp = jnp.pad(mask.astype(jnp.float32), (0, pb))[:, None]
+    gb = (b + pb) // bb
+
+    delta, miss = pl.pallas_call(
+        _make_kernel(c, lr),
+        grid=(gb,),
+        in_specs=[
+            pl.BlockSpec((bb, dd + pd), lambda i: (i, 0)),
+            pl.BlockSpec((bb, dd + pd), lambda i: (i, 0)),
+            pl.BlockSpec((dd + pd, c + pc), lambda i: (0, 0)),
+            pl.BlockSpec((1, c + pc), lambda i: (0, 0)),
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((c + pc, dd + pd), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c + pc, dd + pd), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, up, ap, ownp, yp, mp)
+    return delta[:c, :dd], miss[0, 0]

@@ -96,3 +96,37 @@ def am_search_packed(q_packed: Array, am_packed_t: Array, n_dims: int,
     best_idx = jnp.argmax(sims, axis=-1).astype(jnp.int32)
     best_sim = jnp.max(sims, axis=-1)
     return best_idx, best_sim
+
+
+def qail_update_delta(q: Array, upd: Array, am_t: Array,
+                      centroid_class: Array, labels: Array, mask: Array,
+                      lr: float) -> tuple[Array, Array]:
+    """Fused QAIL inner step (§III-C steps 1-3) for one minibatch.
+
+    q: (B, D) binarized queries; upd: (B, D) Eq.-(6) update payload;
+    am_t: (D, C) transposed binary AM; centroid_class: (C,) ownership;
+    labels: (B,) int labels (-1 for padded rows); mask: (B,) {0,1}.
+
+    Returns (delta, n_miss): delta is the (C, D) float32 Eq.-(6) AM
+    increment, expressed as the one-hot selection matmul
+    ``W^T @ upd`` with W[i] = lr*mis_i*(onehot(true_t_i)-onehot(pred_t_i))
+    — the formulation the Pallas kernel computes on the MXU, so kernel
+    and oracle share bit-identical arithmetic.
+    """
+    c = am_t.shape[1]
+    sims = jnp.dot(q.astype(jnp.float32), am_t.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)  # (B, C)
+    pred_t = jnp.argmax(sims, axis=-1)  # Eq. (4)
+    pred_class = centroid_class[pred_t]
+    mis = (pred_class != labels).astype(jnp.float32) * mask
+
+    neg = jnp.finfo(sims.dtype).min
+    own = centroid_class[None, :] == labels[:, None]
+    true_t = jnp.argmax(jnp.where(own, sims, neg), axis=-1)  # Eq. (5)
+
+    w = (lr * mis)[:, None] * (
+        jax.nn.one_hot(true_t, c, dtype=jnp.float32)
+        - jax.nn.one_hot(pred_t, c, dtype=jnp.float32))  # (B, C)
+    delta = jnp.dot(w.T, upd.astype(jnp.float32),
+                    preferred_element_type=jnp.float32)  # (C, D)
+    return delta, mis.sum()

@@ -11,9 +11,19 @@ with the full production substrate:
   * optional simulated failure injection (--fail-at-step) used by the
     fault-tolerance tests to prove bit-exact resume.
 
+Two trainer families run under the same driver:
+
+  * the LM archs from ``repro.configs`` (per-step AdamW training), and
+  * ``--arch memhd`` — the paper's QAIL trainer: one "step" is one
+    scan-compiled device-resident epoch (``qail.qail_epoch_scan``), the
+    checkpointed state is a ``MemhdTrainState``, and resume is bit-exact
+    (asserted by tests/test_train_loop.py via the final AM digest).
+
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m \
       --smoke --steps 50 --ckpt-dir /tmp/run1
+  PYTHONPATH=src python -m repro.launch.train --arch memhd \
+      --smoke --steps 10 --ckpt-dir /tmp/memhd_run
 """
 from __future__ import annotations
 
@@ -74,7 +84,125 @@ class StepWatchdog:
         return False
 
 
+def run_memhd(cfg: TrainRunConfig) -> dict:
+    """QAIL training under the fault-tolerant driver.
+
+    One driver "step" == one scan-compiled QAIL epoch (a single device
+    dispatch; the per-epoch ``float(miss)`` is the only host sync). The
+    dataset, encoder and clustering init are deterministic in
+    ``cfg.seed``, so a restore of the newest ``MemhdTrainState``
+    continues the run bit-exactly — the returned ``am_digest`` (sha256
+    of the binary AM) is identical with and without a mid-run crash.
+    """
+    import hashlib
+
+    from repro.checkpoint import CheckpointConfig, CheckpointManager
+    from repro.core import (
+        EncoderConfig, MemhdConfig, MemhdModel, encoding, qail,
+    )
+    from repro.core.memhd import MemhdTrainState
+    from repro.data import load_dataset
+
+    if cfg.smoke:
+        ds = load_dataset("mnist", train_per_class=120, test_per_class=30,
+                          seed=cfg.seed)
+        enc = EncoderConfig(kind="projection", features=ds.features,
+                            dim=256)
+        amc = MemhdConfig(dim=256, columns=64, classes=ds.classes,
+                          kmeans_iters=8, lr=0.02, batch_size=256,
+                          seed=cfg.seed)
+    else:
+        ds = load_dataset("mnist", train_per_class=1000,
+                          test_per_class=200, seed=cfg.seed)
+        enc = EncoderConfig(kind="projection", features=ds.features,
+                            dim=512)
+        amc = MemhdConfig(dim=512, columns=128, classes=ds.classes,
+                          kmeans_iters=25, lr=0.02, batch_size=256,
+                          seed=cfg.seed)
+
+    model = MemhdModel.create(jax.random.key(cfg.seed), enc, amc)
+    h = model.encode(ds.train_x)
+    q = encoding.binarize_query(h)
+    n = h.shape[0]
+    epochs = cfg.steps
+
+    ckpt = CheckpointManager(CheckpointConfig(cfg.ckpt_dir, keep=cfg.keep))
+    template = MemhdTrainState.create(model.am_state)
+    restored_epoch, tree, extra = ckpt.restore(template)
+    miss_hist = []
+    if restored_epoch is not None:
+        state = jax.tree.map(jnp.asarray, tree.am_state)
+        start_epoch = restored_epoch
+        miss_hist = list(extra.get("miss", []))
+        log.info("resumed memhd from epoch %d", start_epoch)
+    else:
+        m_init, _ = model.initialize_am(jax.random.key(cfg.seed + 1),
+                                        ds.train_x, ds.train_y, h=h, q=q)
+        state = m_init.am_state
+        start_epoch = 0
+        ckpt.save(0, MemhdTrainState.create(state, 0),
+                  extra={"miss": miss_hist})
+
+    hb, qb, yb, mask = qail.prebatch(h, q, ds.train_y, amc.batch_size)
+    # Emergency-checkpoint source: a HOST (numpy) snapshot of the last
+    # completed epoch. The device state is donated into the in-flight
+    # scan on accelerator backends, so a live reference would be a dead
+    # buffer exactly when the watchdog needs it. The AM is a few KB —
+    # the per-epoch snapshot cost is noise next to the epoch itself.
+    last_state = [jax.tree.map(np.asarray, state)]
+
+    def emergency_ckpt():
+        log.error("watchdog fired: writing emergency memhd checkpoint")
+        ckpt.save(last_epoch[0],
+                  MemhdTrainState.create(last_state[0], last_epoch[0]),
+                  extra={"miss": miss_hist, "emergency": True})
+
+    last_epoch = [start_epoch]
+    t_start = time.time()
+    for ep in range(start_epoch, epochs):
+        with StepWatchdog(cfg.step_deadline_s, emergency_ckpt):
+            state, n_miss = qail.qail_epoch_scan(state, amc, hb, qb, yb,
+                                                 mask)
+        miss_rate = float(n_miss) / n  # the one host sync this epoch
+        miss_hist.append(miss_rate)
+        last_state[0] = jax.tree.map(np.asarray, state)
+        last_epoch[0] = ep + 1
+        if (ep + 1) % cfg.log_every == 0:
+            log.info("epoch %d miss %.4f (%.2f s/epoch)", ep + 1,
+                     miss_rate,
+                     (time.time() - t_start) / (ep + 1 - start_epoch))
+        if (ep + 1) % cfg.ckpt_every == 0 or ep + 1 == epochs:
+            ckpt.save(ep + 1, MemhdTrainState.create(state, ep + 1),
+                      extra={"miss": miss_hist})
+        if cfg.fail_at_step == ep + 1:
+            log.error("injected failure at epoch %d", ep + 1)
+            os._exit(42)  # simulate a hard node death
+
+    trained = dataclasses.replace(model, am_state=state)
+    eval_acc = trained.score(ds.test_x, ds.test_y)
+    digest = hashlib.sha256(
+        np.asarray(state["binary"]).tobytes()).hexdigest()
+    dt = time.time() - t_start
+    return {
+        "first_miss": miss_hist[0] if miss_hist else None,
+        "last_miss": miss_hist[-1] if miss_hist else None,
+        "steps_run": epochs - start_epoch,
+        "resumed_from": start_epoch,
+        "eval_acc": eval_acc,
+        "am_digest": digest,
+        "samples_per_sec": (n * (epochs - start_epoch) / dt
+                            if dt > 0 and epochs > start_epoch else None),
+    }
+
+
+# Non-LM trainers that run under the same fault-tolerant driver.
+TRAINERS = {"memhd": run_memhd}
+
+
 def run(cfg: TrainRunConfig) -> dict:
+    if cfg.arch in TRAINERS:
+        return TRAINERS[cfg.arch](cfg)
+
     from repro.checkpoint import CheckpointConfig, CheckpointManager
     from repro.configs import get_config, get_smoke_config
     from repro.data.lm import LmDataConfig, PipelineState, next_batch

@@ -227,6 +227,36 @@ print("OK distributed QAIL == single-device QAIL (bf16 sync tolerance)")
 """)
 
 
+def test_memhd_fit_sharded_matches_single_device():
+    """fit_sharded (shard_map scan epochs, bf16 delta wire) vs plain
+    fit on one device: same init, same schedule — the deployed binary
+    AM must agree almost everywhere and accuracy must match."""
+    check_multidev("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import EncoderConfig, MemhdConfig, MemhdModel
+from repro.data import load_dataset
+
+ds = load_dataset("mnist", train_per_class=40, test_per_class=10)
+enc = EncoderConfig(kind="projection", features=ds.features, dim=128)
+amc = MemhdConfig(dim=128, columns=32, classes=ds.classes, epochs=3,
+                  kmeans_iters=5, lr=0.02, batch_size=128)
+m = MemhdModel.create(jax.random.key(0), enc, amc)
+m_fit, _ = m.fit(jax.random.key(1), ds.train_x, ds.train_y)
+
+mesh = jax.make_mesh((8,), ("data",))
+m_sh, hist = m.fit_sharded(jax.random.key(1), ds.train_x, ds.train_y,
+                           mesh=mesh)
+agree = (np.asarray(m_sh.am_state["binary"])
+         == np.asarray(m_fit.am_state["binary"])).mean()
+assert agree > 0.95, agree
+acc_f = m_fit.score(ds.test_x, ds.test_y)
+acc_s = m_sh.score(ds.test_x, ds.test_y)
+assert abs(acc_f - acc_s) < 0.08, (acc_f, acc_s)
+assert len(hist["curve"]) == 3
+print("OK fit_sharded binary agreement", agree)
+""")
+
+
 def test_memhd_dryrun_epoch_on_test_mesh():
     check_multidev("""
 import jax

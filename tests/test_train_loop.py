@@ -12,13 +12,14 @@ SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
 def _run_train(ckpt_dir: str, steps: int, fail_at: int = -1,
+               arch: str = "mamba2-130m",
                ) -> subprocess.CompletedProcess:
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
     code = f"""
 import json
 from repro.launch.train import TrainRunConfig, run
-cfg = TrainRunConfig(arch="mamba2-130m", smoke=True, steps={steps},
+cfg = TrainRunConfig(arch={arch!r}, smoke=True, steps={steps},
                      seq_len=64, global_batch=2, ckpt_dir={ckpt_dir!r},
                      ckpt_every=5, fail_at_step={fail_at}, log_every=100)
 print("RESULT:" + json.dumps(run(cfg)))
@@ -60,3 +61,33 @@ def test_crash_and_resume_bit_exact(tmp_path):
     out3 = _result(p3)
     assert abs(out2["last_loss"] - out3["last_loss"]) < 1e-5, \
         (out2["last_loss"], out3["last_loss"])
+
+
+def test_memhd_miss_decreases(tmp_path):
+    """QAIL under the driver: the train miss rate drops over epochs."""
+    proc = _run_train(str(tmp_path / "run"), steps=8, arch="memhd")
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    out = _result(proc)
+    assert out["last_miss"] < out["first_miss"]
+    assert out["eval_acc"] > 0.5
+
+
+def test_memhd_crash_and_resume_bit_exact(tmp_path):
+    """A hard kill at epoch 7 (after an epoch-5 checkpoint) must resume
+    from epoch 5 and land on exactly the same binary AM as an
+    uninterrupted run (same data stream + deterministic scan epochs) —
+    asserted via the sha256 digest of the deployed artifact."""
+    d_crash = str(tmp_path / "crash")
+    d_clean = str(tmp_path / "clean")
+
+    p1 = _run_train(d_crash, steps=10, fail_at=7, arch="memhd")
+    assert p1.returncode == 42  # injected hard death
+    p2 = _run_train(d_crash, steps=10, arch="memhd")  # auto-resume
+    assert p2.returncode == 0, p2.stderr[-2000:]
+    out2 = _result(p2)
+    assert out2["resumed_from"] == 5  # newest checkpoint before death
+
+    p3 = _run_train(d_clean, steps=10, arch="memhd")
+    out3 = _result(p3)
+    assert out2["am_digest"] == out3["am_digest"]
+    assert out2["eval_acc"] == out3["eval_acc"]
