@@ -1,7 +1,8 @@
 """Benchmark orchestrator — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows per benchmark. Use
-``--only fig3`` (prefix match) to run a subset; ``--fast`` skips the
+``--only fig3`` (prefix match; comma-separate for several, e.g.
+``--only table2,fig_robustness``) to run a subset; ``--fast`` skips the
 accuracy sweeps (minutes) and runs the closed-form + kernel benches.
 """
 import argparse
@@ -15,6 +16,7 @@ BENCHES = [
     ("kernel", "benchmarks.kernel_bench"),
     ("packed", "benchmarks.packed_vs_unpacked"),
     ("train_throughput", "benchmarks.train_throughput"),
+    ("fig_robustness", "benchmarks.fig_robustness"),
     ("fig3", "benchmarks.fig3_accuracy_memory"),
     ("fig4", "benchmarks.fig4_heatmap"),
     ("fig5", "benchmarks.fig5_init"),
@@ -23,7 +25,7 @@ BENCHES = [
     ("roofline", "benchmarks.roofline_report"),
 ]
 FAST = {"table2", "fig7", "kernel", "packed", "train_throughput",
-        "roofline"}
+        "fig_robustness", "roofline"}
 
 
 def main() -> None:
@@ -33,9 +35,10 @@ def main() -> None:
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
+    only = [o for o in args.only.split(",") if o] if args.only else None
     failures = []
     for name, module in BENCHES:
-        if args.only and not name.startswith(args.only):
+        if only and not any(name.startswith(o) for o in only):
             continue
         if args.fast and name not in FAST:
             continue

@@ -1,7 +1,7 @@
 """The paper's own MEMHD operating points, as named configs.
 
 These are the geometries the paper evaluates (Figs. 3–7, Table II):
-square D×C grids for MNIST/FMNIST, fixed 128 columns for ISOLET, and
+square DxC grids for MNIST/FMNIST, fixed 128 columns for ISOLET, and
 the flagship deployment points used in Table II / Fig. 7.
 
     from repro.configs.memhd_paper import paper_config

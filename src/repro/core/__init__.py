@@ -1,7 +1,7 @@
 """MEMHD core: the paper's contribution as composable JAX modules."""
 from repro.core.types import (  # noqa: F401
-    BaselineConfig, DatasetSpec, EncoderConfig, ImcArrayConfig, MemhdConfig,
-    dataset_spec,
+    BaselineConfig, DatasetSpec, EncoderConfig, ImcArrayConfig,
+    ImcSimConfig, MemhdConfig, dataset_spec,
 )
 from repro.core.memhd import (  # noqa: F401
     DeployedMemhd, MemhdModel, MemhdTrainState,

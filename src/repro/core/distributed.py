@@ -4,8 +4,8 @@ The paper trains on a workstation; here the same algorithm is expressed
 as a pod-scale program — the point of integrating MEMHD as a first-class
 feature of the framework rather than a side script:
 
-  * encoding (the f×D binary MVM) shards over the batch axes;
-  * the AM (C×D, ≤ a few MB binary) is replicated — it is the *model*,
+  * encoding (the f x D binary MVM) shards over the batch axes;
+  * the AM (C x D, <= a few MB binary) is replicated — it is the *model*,
     and it is tiny by construction (that is the paper's whole thesis);
   * Eq.-(6) scatter-updates from each batch shard are partial sums into
     the replicated float AM; GSPMD inserts the cross-shard psum;

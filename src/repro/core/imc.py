@@ -7,7 +7,12 @@ layers consume:
 * the Pallas ``am_search`` kernel asserts its grid size equals
   ``cycles(...)`` from this model (hardware model == kernel geometry);
 * the energy benchmark (Fig. 7) evaluates ``energy(...)`` ratios;
-* ``launch/dryrun.py`` reports MEMHD array占用 next to the LM rooflines.
+* ``launch/dryrun.py`` reports MEMHD array occupancy next to the LM
+  rooflines;
+* the device-fidelity simulator (``repro.imcsim`` +
+  ``kernels/am_search_imc.py``) tiles its simulated analog search into
+  exactly this model's (A x A) blocks, so ``assert_consistent_sim``
+  holds for any array geometry.
 
 Mapping semantics (validated against every entry of Table II):
 
@@ -210,3 +215,24 @@ def assert_consistent(dim: int, columns: int, arr: ImcArrayConfig | None = None)
     if math.prod(grid) != cycles:
         raise AssertionError(
             f"kernel grid {grid} inconsistent with IMC cycle model {cycles}")
+
+
+def sim_grid(dim: int, columns: int, arr: ImcArrayConfig | None = None,
+             ) -> tuple:
+    """(row-tiles, col-tiles) the device-fidelity kernel iterates: the
+    tile decomposition of the (D x C) AM onto (rows x cols) arrays.
+    Unlike ``mxu_grid`` this honors non-square array geometry."""
+    arr = arr or ImcArrayConfig()
+    return (_ceil_div(dim, arr.rows), _ceil_div(columns, arr.cols))
+
+
+def assert_consistent_sim(dim: int, columns: int,
+                          arr: ImcArrayConfig | None = None):
+    """Hardware model == simulated-kernel geometry, any array shape."""
+    arr = arr or ImcArrayConfig()
+    grid = sim_grid(dim, columns, arr)
+    cycles = map_memhd(dim, columns, arr).cycles
+    if math.prod(grid) != cycles:
+        raise AssertionError(
+            f"imcsim kernel grid {grid} inconsistent with IMC cycle "
+            f"model {cycles}")

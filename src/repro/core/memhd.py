@@ -160,6 +160,7 @@ class MemhdModel:
             eval_labels: Optional[Array] = None,
             ckpt=None, ckpt_every: int = 1,
             use_kernel: bool = False,
+            noise_sim=None, noise_mode: str = "fixed",
             ) -> Tuple["MemhdModel", Dict]:
         """Full training pipeline: init + scan-compiled QAIL epochs.
 
@@ -179,12 +180,24 @@ class MemhdModel:
             epochs plus at the end.
           use_kernel: route the epoch's inner step through the Pallas
             ``qail_update`` kernel.
+          init_method: "clustering" (paper §III-A), "random", or "keep"
+            — keep the CURRENT AM state and skip (re-)initialization;
+            the fine-tuning mode ``imcsim.noise_aware`` builds on.
+          noise_sim: optional ``ImcSimConfig`` — noise-aware QAIL: the
+            training-time sims MVM sees a device-perturbed view of the
+            binary AM (batched mode only; see ``qail.qail_epoch_scan``).
+          noise_mode: "fixed" (default) trains against the ONE device
+            instance ``deploy(target="imc", sim=noise_sim)`` will burn
+            in (chip-in-the-loop); "fresh" redraws the perturbation per
+            batch (robustness to the device distribution).
 
         Returns (model, history) where history holds per-epoch train miss
         rates and (optional) eval accuracies — consumed by the Fig.-5/6
         benchmarks.
         """
         epochs = self.am_cfg.epochs if epochs is None else epochs
+        if noise_sim is not None and mode != "batched":
+            raise ValueError("noise_sim needs the batched scan engine")
 
         # Encode once; init and every epoch share these buffers.
         h = self.encode(feats)
@@ -207,9 +220,13 @@ class MemhdModel:
                 log.info("fit resumed from epoch %d", start_epoch)
 
         if state is None:
-            model, init_hist = self.initialize_am(
-                key, feats, labels, method=init_method, h=h, q=q)
-            state = model.am_state
+            if init_method == "keep":
+                model, init_hist = self, []
+                state = self.am_state
+            else:
+                model, init_hist = self.initialize_am(
+                    key, feats, labels, method=init_method, h=h, q=q)
+                state = model.am_state
         else:
             model = dataclasses.replace(self, am_state=state)
 
@@ -231,15 +248,26 @@ class MemhdModel:
             n = h.shape[0]
             hb, qb, yb, mask = qail.prebatch(h, q, labels,
                                              self.am_cfg.batch_size)
+        noise_base = None
+        if noise_sim is not None:
+            from repro.imcsim import device as device_lib
+            noise_base = (device_lib.device_instance_key(noise_sim)
+                          if noise_mode == "fixed"
+                          else jax.random.key(noise_sim.seed))
         for ep in range(start_epoch + 1, epochs + 1):
             if mode == "sequential":
                 state = qail.qail_epoch_sequential(
                     state, self.am_cfg, h, q, labels)
                 miss = float("nan")
             else:
+                nkey = None
+                if noise_base is not None:
+                    nkey = (noise_base if noise_mode == "fixed"
+                            else jax.random.fold_in(noise_base, ep))
                 state, n_miss = qail.qail_epoch_scan(
                     state, self.am_cfg, hb, qb, yb, mask,
-                    refresh_every=refresh_every, use_kernel=use_kernel)
+                    refresh_every=refresh_every, use_kernel=use_kernel,
+                    sim=noise_sim, noise_key=nkey, noise_mode=noise_mode)
                 miss = float(n_miss) / n  # the ONE host sync this epoch
             rec = {"epoch": ep, "train_miss": miss}
             if eval_q is not None:
@@ -296,16 +324,33 @@ class MemhdModel:
 
     # -- deployment --------------------------------------------------------------
     def deploy(self, *, packed: bool = True, mode: str = "popcount",
-               ) -> "DeployedMemhd":
+               target: str = "digital", sim=None):
         """Freeze the trained model into its serving artifact.
 
+        ``target="digital"`` (default) serves the exact search:
         ``packed=True`` packs the binary AM 8 cells/byte into the (Dp, C)
         uint8 residence that the paper's Table I counts (1 bit/cell) and
         routes ``score``/``predict`` through the fused XOR+popcount
         kernel; ``packed=False`` keeps the ±1 float AM and the float
         ``am_search`` kernel (the parity baseline). Predictions are
         bit-exact between the two.
+
+        ``target="imc"`` deploys onto a *simulated analog device*
+        (``repro.imcsim``): the binary AM is burned in with the
+        stuck-at faults / conductance variation of ``sim``
+        (an ``ImcSimConfig``; seeded, so the same config always yields
+        the same device) and queries go through the tiled
+        analog-partial-sum + ADC kernel. With an ideal ``sim`` this is
+        bit-exact with the digital artifacts; with a lossy one it is
+        what the robustness sweeps measure.
         """
+        if target == "imc":
+            from repro.imcsim import deploy_imc
+            return deploy_imc(self, sim)
+        if target != "digital":
+            raise ValueError(f"unknown deploy target: {target!r}")
+        if sim is not None:
+            raise ValueError("sim= is only meaningful with target='imc'")
         binary = self.am_state["binary"]
         am_packed_t = am_lib.pack_am(binary) if packed else None
         return DeployedMemhd(

@@ -256,12 +256,16 @@ def prebatch(h: Array, q: Array, labels: Array, batch_size: int,
             yb.reshape(nb, batch_size), mask.reshape(nb, batch_size))
 
 
-@partial(jax.jit, static_argnames=("cfg", "refresh_every", "use_kernel"),
+@partial(jax.jit,
+         static_argnames=("cfg", "refresh_every", "use_kernel", "sim",
+                          "noise_mode"),
          donate_argnums=_DONATE)
 def qail_epoch_scan(state: AmState, cfg: MemhdConfig,
                     hb: Array, qb: Array, yb: Array, mask: Array,
                     *, refresh_every: int = 1,
                     use_kernel: bool = False,
+                    sim=None, noise_key: Array = None,
+                    noise_mode: str = "fixed",
                     ) -> Tuple[AmState, Array]:
     """One QAIL epoch as a single compiled ``lax.scan`` over minibatches.
 
@@ -285,6 +289,22 @@ def qail_epoch_scan(state: AmState, cfg: MemhdConfig,
         ``qail_update`` kernel (TPU; interpret elsewhere) instead of the
         pure-jnp scatter path. Both are oracle-checked against each other
         in tests/test_qail_engine.py.
+      sim: optional ``ImcSimConfig`` (static) — the noise-aware QAIL
+        hook. When it carries conductance noise or stuck-at faults, each
+        batch's sims MVM (and Eq.-4/5 target selection) is evaluated
+        against a device-perturbed view of the binary AM
+        (``imcsim.device.perturb_binary``), so centroids learn margins
+        that survive analog readout. The Eq.-(6) update still lands on
+        the clean float shadow AM.
+      noise_key: PRNG key for the perturbations; required when ``sim``
+        injects noise/faults.
+      noise_mode: "fixed" — every batch sees the SAME perturbation
+        (keyed by ``noise_key`` alone): chip-in-the-loop training
+        against one deterministic device instance, QAIL's
+        train-on-the-deployed-representation principle taken down to
+        the device level. "fresh" — a new draw per batch
+        (fold_in(noise_key, batch)): trains for expected accuracy over
+        the device distribution.
 
     Returns:
       (state, n_miss) — n_miss is a DEVICE scalar; pulling it is the
@@ -296,6 +316,24 @@ def qail_epoch_scan(state: AmState, cfg: MemhdConfig,
     centroid_class = state["centroid_class"]
     nb = hb.shape[0]
 
+    noisy = sim is not None and (sim.noise_sigma > 0.0
+                                 or sim.fault_p0 > 0.0
+                                 or sim.fault_p1 > 0.0)
+    if sim is not None and not noisy:
+        # The hook injects storage-path effects (conductance noise,
+        # stuck-at faults); a sim whose only non-ideality is the ADC or
+        # readout drift would silently train plain QAIL — refuse rather
+        # than report a bogus "noise-aware" run.
+        raise ValueError(
+            "sim carries no conductance noise or stuck-at faults; the "
+            "noise-aware hook would be a no-op (ADC/drift live in the "
+            "readout path, not the training MVM) — pass sim=None or a "
+            "sim with noise_sigma/fault_p0/fault_p1 > 0")
+    if noisy and noise_key is None:
+        raise ValueError("sim injects device noise: pass noise_key")
+    if noise_mode not in ("fixed", "fresh"):
+        raise ValueError(f"bad noise_mode: {noise_mode!r}")
+
     def _refresh(args):
         return refresh_am(args[0], args[1], cfg)
 
@@ -303,13 +341,20 @@ def qail_epoch_scan(state: AmState, cfg: MemhdConfig,
         fp, binary = carry
         b_idx, hx, qx, yx, mx = xs
         upd = hx if cfg.update_with == "encoded" else qx
+        if noisy:
+            from repro.imcsim import device as device_lib
+            bkey = (noise_key if noise_mode == "fixed"
+                    else jax.random.fold_in(noise_key, b_idx))
+            binary_mvm = device_lib.perturb_binary(bkey, binary, sim)
+        else:
+            binary_mvm = binary
         if use_kernel:
             from repro.kernels import ops
             delta, miss = ops.qail_update(
-                qx, upd, binary.T, centroid_class, yx, mx, lr=cfg.lr)
+                qx, upd, binary_mvm.T, centroid_class, yx, mx, lr=cfg.lr)
             fp = fp + delta
         else:
-            sims = qx @ binary.T  # (bs, C)
+            sims = qx @ binary_mvm.T  # (bs, C)
             pred_t = jnp.argmax(sims, axis=-1)
             mis = (centroid_class[pred_t] != yx).astype(jnp.float32) * mx
             neg = jnp.finfo(sims.dtype).min

@@ -146,6 +146,85 @@ class ImcArrayConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ImcSimConfig:
+    """Device-fidelity knobs for simulated analog AM search (imcsim).
+
+    The digital kernels compute the associative search exactly; a real
+    IMC deployment computes it through per-array analog partial sums,
+    finite-resolution ADCs and imperfect cells. This config bundles the
+    fidelity model that ``kernels/am_search_imc.py`` and
+    ``repro.imcsim`` simulate. It is a frozen, hashable dataclass so it
+    can ride through ``jax.jit`` as a static argument.
+
+    Attributes:
+      arr: geometry of one physical array tile (rows x cols); the
+        simulated search is tiled into exactly these blocks and the
+        kernel grid equals ``imc.map_memhd(...).cycles``.
+      adc_bits: ADC resolution b. Each tile's analog partial sum is
+        quantized by a symmetric mid-tread quantizer with step
+        ``2*clip / 2**b`` (2^b + 1 codes) before digital accumulation.
+        With the default power-of-two clip the step is a power of two,
+        so integer-valued bipolar partial sums are reproduced exactly
+        whenever ``2*clip / 2**b <= 1`` — e.g. any b >= 8 at the default
+        128-row array, which is what makes the >=16-bit parity contract
+        bit-exact.
+      adc_clip: ADC full-scale range; partial sums are clipped to
+        [-clip, +clip] before quantization. None means ``arr.rows`` (the
+        physical maximum of a bipolar tile partial sum).
+      noise_sigma: std-dev of i.i.d. Gaussian conductance variation
+        added to each stored cell (bipolar domain, cell magnitude 1).
+      fault_p0 / fault_p1: per-cell stuck-at fault probabilities. A
+        stuck-at-0 cell reads bit 0 (bipolar -1), stuck-at-1 reads bit 1
+        (bipolar +1), regardless of the written value.
+      drift_sigma: std-dev of the per-tile additive readout offset
+        (one Gaussian offset per (row-tile, col-tile) array, applied to
+        the tile's partial sum before the ADC).
+      seed: PRNG seed for the device perturbations; the same config
+        always deploys the same simulated device instance.
+    """
+
+    arr: ImcArrayConfig = ImcArrayConfig()
+    adc_bits: int = 16
+    adc_clip: Optional[float] = None
+    noise_sigma: float = 0.0
+    fault_p0: float = 0.0
+    fault_p1: float = 0.0
+    drift_sigma: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.adc_bits < 1:
+            raise ValueError("adc_bits must be >= 1")
+        if self.adc_clip is not None and self.adc_clip <= 0:
+            raise ValueError("adc_clip must be positive")
+        for name in ("noise_sigma", "drift_sigma"):
+            if getattr(self, name) < 0:
+                raise ValueError(f"{name} must be >= 0")
+        if not (0.0 <= self.fault_p0 <= 1.0 and 0.0 <= self.fault_p1 <= 1.0
+                and self.fault_p0 + self.fault_p1 <= 1.0):
+            raise ValueError(
+                "fault_p0/fault_p1 must be probabilities with p0 + p1 <= 1")
+
+    @property
+    def clip(self) -> float:
+        """Effective ADC full-scale range."""
+        return float(self.arr.rows if self.adc_clip is None else
+                     self.adc_clip)
+
+    @property
+    def adc_step(self) -> float:
+        """Quantization step of the mid-tread ADC."""
+        return 2.0 * self.clip / (2 ** self.adc_bits)
+
+    @property
+    def ideal(self) -> bool:
+        """True when every perturbation is off (exact-parity regime
+        additionally needs ``adc_step <= 1``, see ``adc_bits``)."""
+        return (self.noise_sigma == 0.0 and self.drift_sigma == 0.0
+                and self.fault_p0 == 0.0 and self.fault_p1 == 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
 class BaselineConfig:
     """Configuration for the binary-HDC baselines of Table I.
 

@@ -1,0 +1,34 @@
+"""Device-fidelity IMC simulation subsystem.
+
+``repro.core.imc`` accounts for the IMC deployment in closed form
+(cycles / arrays / energy); this package *executes* it. The pieces:
+
+* ``device`` — seeded, jit-compatible device imperfection models:
+  Gaussian conductance variation, stuck-at-0/1 cell faults, per-tile
+  readout drift. All are expressed as perturbations of the resident
+  bipolar AM (plus a per-tile offset grid for the readout path).
+* ``kernels/am_search_imc`` (in the kernel package) — the tiled analog
+  search itself: per-array partial sums, ADC quantization, digital
+  accumulation, running argmax; grid == ``imc.cycles``.
+* ``deploy`` — ``ImcDeployedMemhd``, the simulated-hardware serving
+  artifact behind ``MemhdModel.deploy(target="imc", sim=...)``.
+* ``evaluate`` — robustness sweeps (accuracy vs ADC bits / noise sigma
+  / fault rate), routed through ``core/evaluate.py``'s padded batched
+  evaluator.
+* ``noise_aware`` — the noise-aware QAIL hook: fine-tune with device
+  noise injected into the training-time sims MVM so centroids learn
+  margins that survive analog readout.
+"""
+from repro.core.types import ImcSimConfig  # noqa: F401
+from repro.imcsim.deploy import ImcDeployedMemhd, deploy_imc  # noqa: F401
+from repro.imcsim.device import (  # noqa: F401
+    conductance_noise, perturb_am, perturb_binary, stuck_at_faults,
+    tile_drift, tile_grid,
+)
+from repro.imcsim.evaluate import (  # noqa: F401
+    imc_accuracy, robustness_report, sweep_adc_bits, sweep_fault_rate,
+    sweep_noise_sigma,
+)
+from repro.imcsim.noise_aware import (  # noqa: F401
+    noise_aware_finetune, recovery_experiment,
+)

@@ -1,0 +1,113 @@
+"""Simulated-hardware serving artifact: MEMHD on imperfect analog arrays.
+
+``MemhdModel.deploy(target="imc", sim=ImcSimConfig(...))`` freezes the
+trained binary AM onto a *simulated device instance*: stuck-at faults
+and conductance variation are burned into the resident analog AM once
+(seeded by ``sim.seed`` — the same config always deploys the same
+device), per-tile drift offsets are attached to the readout, and every
+query then goes through the tiled analog search kernel
+(``kernels/am_search_imc``): per-array partial sums, ADC quantization,
+digital accumulation, argmax.
+
+With an ideal sim (no perturbations, ADC step <= 1) the artifact's
+predictions are bit-exact with the digital model — the fidelity-parity
+contract proven in tests/test_imcsim.py. With a realistic sim it is the
+thing the robustness sweeps (``imcsim.evaluate``) and the noise-aware
+trainer (``imcsim.noise_aware``) measure against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+
+from repro.core import encoding, evaluate as eval_lib
+from repro.core import imc as imc_lib
+from repro.core.types import EncoderConfig, ImcSimConfig, MemhdConfig
+from repro.imcsim import device as device_lib
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ImcDeployedMemhd:
+    """Frozen MEMHD model resident on a simulated analog device.
+
+    Immutable pytree (like ``DeployedMemhd``): the analog AM, the
+    per-tile readout offsets and the encoder parameters are the leaves;
+    the configs ride in aux. ``predict``/``score`` route through the
+    tiled analog kernel; ``cycles`` exposes the kernel-grid ==
+    ``imc.cycles`` contract for this geometry.
+    """
+
+    enc_params: Dict[str, Array]
+    am_analog: Array               # (C, D) fault+noise perturbed AM
+    tile_offsets: Optional[Array]  # (gd, gc) readout drift, or None
+    centroid_class: Array          # (C,) int32
+    enc_cfg: EncoderConfig
+    am_cfg: MemhdConfig
+    sim: ImcSimConfig
+
+    def tree_flatten(self):
+        children = (self.enc_params, self.am_analog, self.tile_offsets,
+                    self.centroid_class)
+        aux = (self.enc_cfg, self.am_cfg, self.sim)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        enc_params, am_analog, tile_offsets, centroid_class = children
+        enc_cfg, am_cfg, sim = aux
+        return cls(enc_params, am_analog, tile_offsets, centroid_class,
+                   enc_cfg, am_cfg, sim)
+
+    # -- inference -------------------------------------------------------------
+    def predict_query(self, q: Array) -> Array:
+        """(B, D) bipolar queries -> (B,) predicted class, via the
+        simulated analog readout."""
+        from repro.kernels import ops
+        idx, _ = ops.am_search_imc(q, self.am_analog, sim=self.sim,
+                                   offsets=self.tile_offsets)
+        return self.centroid_class[idx]
+
+    def predict(self, feats: Array) -> Array:
+        q = encoding.encode_query(self.enc_params, self.enc_cfg, feats)
+        return self.predict_query(q)
+
+    def score(self, feats: Array, labels: Array, batch: int = 4096,
+              ) -> float:
+        return eval_lib.batched_accuracy(self.predict, feats, labels, batch)
+
+    # -- deployment accounting -------------------------------------------------
+    @property
+    def cycles(self) -> int:
+        """Array passes per query — the kernel grid, which equals
+        ``imc.map_memhd(D, C, arr).cycles`` by construction."""
+        from repro.kernels.am_search_imc import imc_cycles_for
+        return imc_cycles_for((self.am_cfg.dim, self.am_cfg.columns),
+                              self.sim.arr.rows, self.sim.arr.cols)
+
+    def imc_cost(self, arr=None):
+        return imc_lib.memhd_pipeline(
+            self.enc_cfg.features, self.am_cfg.dim, self.am_cfg.columns,
+            arr or self.sim.arr)
+
+
+def deploy_imc(model, sim: Optional[ImcSimConfig] = None,
+               ) -> ImcDeployedMemhd:
+    """Burn ``model``'s binary AM onto a simulated device instance."""
+    sim = sim or ImcSimConfig()
+    imc_lib.assert_consistent_sim(model.am_cfg.dim, model.am_cfg.columns,
+                                  sim.arr)
+    key = jax.random.key(sim.seed)
+    am_analog, offsets = device_lib.perturb_am(
+        key, model.am_state["binary"], sim)
+    return ImcDeployedMemhd(
+        enc_params=model.enc_params,
+        am_analog=am_analog,
+        tile_offsets=offsets,
+        centroid_class=model.am_state["centroid_class"],
+        enc_cfg=model.enc_cfg, am_cfg=model.am_cfg, sim=sim,
+    )

@@ -1,0 +1,116 @@
+"""Device imperfection models: what the analog arrays do to stored bits.
+
+Three physical effects, each modeled as a perturbation of the resident
+bipolar AM (or, for drift, of the readout path), all seeded and
+jit-compatible so they can run inside the training scan as well as at
+deploy time:
+
+* **Stuck-at faults** — write-path defects: a stuck-at-0 cell reads bit
+  0 (bipolar -1) and a stuck-at-1 cell reads bit 1 (bipolar +1)
+  regardless of the value written. Applied first: they corrupt the
+  *stored* bit.
+* **Conductance variation** — i.i.d. Gaussian perturbation of each
+  cell's effective weight around its (possibly fault-corrupted) stored
+  value; the classic programming-variability model.
+* **Per-tile readout drift** — one Gaussian offset per physical (A x A)
+  array, added to that array's analog partial sum before the ADC (sense
+  amplifier / reference drift). This one lives in the readout, so it is
+  returned as an offset grid consumed by ``kernels/am_search_imc``.
+
+The perturbed AM is what actually sits in the simulated arrays: the
+same instance serves every query (deploy-time determinism comes from
+``ImcSimConfig.seed``), while the noise-aware trainer draws a *fresh*
+perturbation per minibatch to train against the distribution.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ImcSimConfig
+
+Array = jax.Array
+
+
+def tile_grid(dim: int, columns: int, sim: ImcSimConfig) -> Tuple[int, int]:
+    """(row-tiles, col-tiles) the (C, D) AM maps onto: the offset-grid
+    shape. Delegates to ``imc.sim_grid`` so the device models, the
+    kernel grid, and the cost model share ONE tile decomposition."""
+    from repro.core import imc
+    return imc.sim_grid(dim, columns, sim.arr)
+
+
+def conductance_noise(key: Array, am: Array, sigma: float) -> Array:
+    """Gaussian conductance variation around each stored cell value."""
+    if sigma == 0.0:
+        return am
+    return am + sigma * jax.random.normal(key, am.shape, am.dtype)
+
+
+def stuck_at_faults(key: Array, am: Array, p0: float, p1: float) -> Array:
+    """Stuck-at cell faults: disjoint SA0 (-> -1) / SA1 (-> +1) masks.
+
+    Each cell is independently stuck-at-0 with probability p0 and
+    stuck-at-1 with probability p1 (disjoint events carved out of one
+    uniform draw, so a cell can't be both).
+    """
+    if p0 == 0.0 and p1 == 0.0:
+        return am
+    u = jax.random.uniform(key, am.shape)
+    am = jnp.where(u < p0, jnp.asarray(-1.0, am.dtype), am)
+    am = jnp.where((u >= p0) & (u < p0 + p1),
+                   jnp.asarray(1.0, am.dtype), am)
+    return am
+
+
+def tile_drift(key: Array, grid: Tuple[int, int], sigma: float) -> Array:
+    """(gd, gc) per-array readout offsets; zeros when sigma == 0."""
+    if sigma == 0.0:
+        return jnp.zeros(grid, jnp.float32)
+    return sigma * jax.random.normal(key, grid, jnp.float32)
+
+
+def perturb_binary(key: Array, binary_am: Array, sim: ImcSimConfig,
+                   ) -> Array:
+    """Storage-path perturbations only (faults, then conductance noise).
+
+    This is the AM view the *training-time* sims MVM sees (the
+    noise-aware QAIL hook): drift offsets belong to the tiled readout
+    and are handled by the imc kernel, not here.
+    """
+    k_fault, k_noise = jax.random.split(key)
+    am = stuck_at_faults(k_fault, binary_am, sim.fault_p0, sim.fault_p1)
+    return conductance_noise(k_noise, am, sim.noise_sigma)
+
+
+def device_instance_key(sim: ImcSimConfig) -> Array:
+    """The cell-perturbation key of the deployed device instance.
+
+    ``deploy_imc`` derives its fault/noise key as the first split of
+    ``jax.random.key(sim.seed)``; chip-in-the-loop training
+    (``noise_mode="fixed"``) must perturb with exactly this key so the
+    training-time sims MVM sees the very device it will deploy onto.
+    """
+    k_cells, _ = jax.random.split(jax.random.key(sim.seed))
+    return k_cells
+
+
+def perturb_am(key: Array, binary_am: Array, sim: ImcSimConfig,
+               ) -> Tuple[Array, Optional[Array]]:
+    """Full device instance for a (C, D) binary AM.
+
+    Returns ``(am_analog, offsets)``: the fault+noise perturbed AM and
+    the (gd, gc) per-tile readout offset grid (None when drift is off).
+    Deterministic in (key, sim): the same config always deploys the
+    same simulated device.
+    """
+    k_cells, k_drift = jax.random.split(key)
+    am = perturb_binary(k_cells, binary_am, sim)
+    offsets = None
+    if sim.drift_sigma > 0.0:
+        c, d = binary_am.shape
+        offsets = tile_drift(k_drift, tile_grid(d, c, sim),
+                             sim.drift_sigma)
+    return am, offsets

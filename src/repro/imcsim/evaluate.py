@@ -1,0 +1,129 @@
+"""Robustness evaluation: accuracy vs. device fidelity, swept.
+
+Every point deploys the trained model onto one simulated device
+instance (``deploy_imc``) and scores it through the shared padded
+batched evaluator (``core/evaluate.batched_accuracy`` — the same
+machinery every other accuracy loop in the repo uses, so ragged test
+sets don't recompile here either). Sweeps vary ONE fidelity axis of a
+base ``ImcSimConfig`` and report plain dict rows, JSON-able for the
+``launch/robustness_report.py`` CLI and ``benchmarks/fig_robustness``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+
+from repro.core import evaluate as eval_lib
+from repro.core.types import ImcSimConfig
+
+Array = jax.Array
+
+# Default sweep axes: chosen to span "indistinguishable from digital"
+# to "readout dominated by device error" at the flagship 128x128 point.
+ADC_BITS = (16, 8, 6, 5, 4, 3, 2)
+NOISE_SIGMAS = (0.0, 0.25, 0.5, 1.0, 1.5, 2.0)
+FAULT_RATES = (0.0, 0.01, 0.02, 0.05, 0.1, 0.2)
+
+
+def _queries_of(model, feats: Array, queries: Optional[Array]) -> Array:
+    """Encode once per sweep: every sweep point shares the same encoder,
+    so the (f x D) encode of the test set is hoisted out of the loop and
+    each point pays only for its AM search."""
+    return model.encode_query(feats) if queries is None else queries
+
+
+def _score_queries(model, q: Array, labels: Array, sim: ImcSimConfig,
+                   batch: int = 4096) -> float:
+    from repro.imcsim.deploy import deploy_imc
+    dep = deploy_imc(model, sim)
+    return eval_lib.batched_accuracy(dep.predict_query, q, labels, batch)
+
+
+def imc_accuracy(model, feats: Array, labels: Array,
+                 sim: Optional[ImcSimConfig] = None,
+                 batch: int = 4096,
+                 queries: Optional[Array] = None) -> float:
+    """Accuracy of ``model`` deployed on one simulated device.
+
+    Pass pre-encoded ``queries`` to reuse an existing encode of
+    ``feats`` (the sweeps do).
+    """
+    return _score_queries(model, _queries_of(model, feats, queries),
+                          labels, sim or ImcSimConfig(), batch)
+
+
+def _sweep(model, feats, labels, base: ImcSimConfig, axis: str,
+           values: Sequence, queries: Optional[Array] = None) -> List[Dict]:
+    q = _queries_of(model, feats, queries)
+    rows = []
+    for v in values:
+        sim = dataclasses.replace(base, **{axis: v})
+        rows.append({axis: v,
+                     "accuracy": _score_queries(model, q, labels, sim)})
+    return rows
+
+
+def sweep_adc_bits(model, feats: Array, labels: Array,
+                   bits: Sequence[int] = ADC_BITS,
+                   base: Optional[ImcSimConfig] = None,
+                   queries: Optional[Array] = None) -> List[Dict]:
+    """Accuracy vs. ADC resolution (other knobs from ``base``)."""
+    return _sweep(model, feats, labels, base or ImcSimConfig(),
+                  "adc_bits", list(bits), queries)
+
+
+def sweep_noise_sigma(model, feats: Array, labels: Array,
+                      sigmas: Sequence[float] = NOISE_SIGMAS,
+                      base: Optional[ImcSimConfig] = None,
+                      queries: Optional[Array] = None) -> List[Dict]:
+    """Accuracy vs. conductance-variation sigma."""
+    return _sweep(model, feats, labels, base or ImcSimConfig(),
+                  "noise_sigma", list(sigmas), queries)
+
+
+def sweep_fault_rate(model, feats: Array, labels: Array,
+                     rates: Sequence[float] = FAULT_RATES,
+                     base: Optional[ImcSimConfig] = None,
+                     queries: Optional[Array] = None) -> List[Dict]:
+    """Accuracy vs. stuck-at fault rate (split evenly SA0/SA1)."""
+    base = base or ImcSimConfig()
+    q = _queries_of(model, feats, queries)
+    rows = []
+    for r in rates:
+        sim = dataclasses.replace(base, fault_p0=r / 2, fault_p1=r / 2)
+        rows.append({"fault_rate": r,
+                     "accuracy": _score_queries(model, q, labels, sim)})
+    return rows
+
+
+def robustness_report(model, feats: Array, labels: Array,
+                      base: Optional[ImcSimConfig] = None,
+                      adc_bits: Sequence[int] = ADC_BITS,
+                      noise_sigmas: Sequence[float] = NOISE_SIGMAS,
+                      fault_rates: Sequence[float] = FAULT_RATES,
+                      ) -> Dict:
+    """Full accuracy-vs-fidelity report for one trained model.
+
+    Returns a JSON-able dict: the digital reference accuracy, the
+    geometry/cost contract, and one sweep per fidelity axis (each axis
+    swept with the other knobs at their ``base`` values).
+    """
+    base = base or ImcSimConfig()
+    q = model.encode_query(feats)  # ONE encode serves every sweep point
+    digital = model.score(feats, labels)
+    ideal = imc_accuracy(model, feats, labels, base, queries=q)
+    return {
+        "geometry": f"{model.am_cfg.dim}x{model.am_cfg.columns}",
+        "array": f"{base.arr.rows}x{base.arr.cols}",
+        "cycles": model.imc_cost(base.arr).am.cycles,
+        "digital_accuracy": digital,
+        "base_sim_accuracy": ideal,
+        "adc_sweep": sweep_adc_bits(model, feats, labels, adc_bits, base,
+                                    queries=q),
+        "noise_sweep": sweep_noise_sigma(model, feats, labels,
+                                         noise_sigmas, base, queries=q),
+        "fault_sweep": sweep_fault_rate(model, feats, labels,
+                                        fault_rates, base, queries=q),
+    }

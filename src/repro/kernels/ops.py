@@ -12,6 +12,8 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.am_search import am_search as _am_search
 from repro.kernels.am_search import imc_cycles_for as search_cycles
+from repro.kernels.am_search_imc import am_search_imc as _am_search_imc
+from repro.kernels.am_search_imc import imc_cycles_for as imc_search_cycles
 from repro.kernels.am_search_packed import am_search_packed as _am_search_packed
 from repro.kernels.am_search_packed import imc_cycles_for as packed_search_cycles
 from repro.kernels.am_search_packed import pack_rows as _pack_rows
@@ -24,9 +26,10 @@ from repro.kernels.qail_update import qail_update as _qail_update
 Array = jax.Array
 
 __all__ = [
-    "encode_mvm", "am_search", "am_search_packed", "pack_bits",
-    "unpack_bits", "pack_rows", "qail_update", "search_cycles",
-    "packed_search_cycles", "mvm_cycles", "ref",
+    "encode_mvm", "am_search", "am_search_imc", "am_search_packed",
+    "pack_bits", "unpack_bits", "pack_rows", "qail_update",
+    "search_cycles", "imc_search_cycles", "packed_search_cycles",
+    "mvm_cycles", "ref",
 ]
 
 
@@ -55,6 +58,30 @@ def am_search(queries: Array, am: Array, *, use_kernel: bool = True,
     if not use_kernel:
         return ref.am_search(queries, am_t)
     return _am_search(queries, am_t)
+
+
+def am_search_imc(queries: Array, am: Array, *, sim, offsets: Array = None,
+                  use_kernel: bool = True) -> tuple[Array, Array]:
+    """Device-fidelity associative search (tiled analog MVM + ADC).
+
+    queries: (B, D); am: (C, D) resident centroid rows — typically the
+    perturbed output of ``repro.imcsim.device.perturb_am``; sim: an
+    ``ImcSimConfig`` (array geometry + ADC transfer); offsets: optional
+    per-tile readout drift grid.
+
+    With an ideal sim (>=8-bit ADC at the default 128-row array, no
+    perturbations) the result is bit-exact with ``am_search``.
+
+    Returns (best_idx, best_sim): (B,) int32, (B,) float32.
+    """
+    am_t = am.T
+    if not use_kernel:
+        return ref.am_search_imc(
+            queries, am_t, tile_rows=sim.arr.rows, tile_cols=sim.arr.cols,
+            adc_bits=sim.adc_bits, adc_clip=sim.clip, offsets=offsets)
+    return _am_search_imc(
+        queries, am_t, offsets, tile_rows=sim.arr.rows,
+        tile_cols=sim.arr.cols, adc_bits=sim.adc_bits, adc_clip=sim.clip)
 
 
 def am_search_packed(q_packed: Array, am_packed_t: Array, *, n_dims: int,

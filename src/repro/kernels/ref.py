@@ -98,6 +98,57 @@ def am_search_packed(q_packed: Array, am_packed_t: Array, n_dims: int,
     return best_idx, best_sim
 
 
+def adc_quantize(x: Array, bits: int, clip: float) -> Array:
+    """Symmetric mid-tread ADC transfer function.
+
+    Clips to [-clip, +clip] and rounds to the nearest of the 2^bits + 1
+    codes spaced ``step = 2*clip / 2**bits`` apart (jnp.round semantics:
+    ties to even, matching the kernel bit-for-bit). With a power-of-two
+    clip the step is a power of two, so any integer input with
+    ``|x| <= clip`` is reproduced exactly once ``step <= 1``.
+    """
+    step = 2.0 * clip / (2 ** bits)
+    x = jnp.clip(x, -clip, clip)
+    return jnp.round(x / step) * step
+
+
+def am_search_imc(q: Array, am_t: Array, *, tile_rows: int, tile_cols: int,
+                  adc_bits: int, adc_clip: float,
+                  offsets: Array | None = None) -> tuple[Array, Array]:
+    """Tiled analog associative-search oracle (device-fidelity semantics).
+
+    The AM is split into (tile_rows x tile_cols) physical arrays; each
+    array contributes an analog partial sum that picks up its per-tile
+    readout offset, goes through the ADC (``adc_quantize``), and only
+    then is accumulated digitally across row-tiles. Argmax is first-wins
+    over the quantized similarities.
+
+    q: (B, D) queries; am_t: (D, C) transposed (possibly perturbed) AM;
+    offsets: optional (ceil(D/tile_rows), ceil(C/tile_cols)) per-tile
+    readout offsets. Returns (best_idx, best_sim) like ``am_search``.
+    """
+    b, d = q.shape
+    d2, c = am_t.shape
+    assert d == d2, (q.shape, am_t.shape)
+    gd = -(-d // tile_rows)
+    gc = -(-c // tile_cols)
+    qp = jnp.pad(q.astype(jnp.float32), ((0, 0), (0, gd * tile_rows - d)))
+    ap = jnp.pad(am_t.astype(jnp.float32),
+                 ((0, gd * tile_rows - d), (0, gc * tile_cols - c)))
+    qr = qp.reshape(b, gd, tile_rows)
+    ar = ap.reshape(gd, tile_rows, gc, tile_cols)
+    # One (g, h) slot == one physical array's analog MVM output.
+    part = jnp.einsum("bgr,grhc->bghc", qr, ar,
+                      preferred_element_type=jnp.float32)
+    if offsets is not None:
+        part = part + offsets[None, :, :, None]
+    part = adc_quantize(part, adc_bits, adc_clip)
+    sims = jnp.sum(part, axis=1).reshape(b, gc * tile_cols)[:, :c]
+    best_idx = jnp.argmax(sims, axis=-1).astype(jnp.int32)
+    best_sim = jnp.max(sims, axis=-1)
+    return best_idx, best_sim
+
+
 def qail_update_delta(q: Array, upd: Array, am_t: Array,
                       centroid_class: Array, labels: Array, mask: Array,
                       lr: float) -> tuple[Array, Array]:

@@ -1,0 +1,412 @@
+"""Device-fidelity simulation subsystem: the fidelity-parity contract
+(ideal sim == exact digital search, bit for bit, ties included), kernel
+== oracle under lossy fidelity, kernel grid == IMC cycle model, seeded
+device models, the imc deployment artifact, and noise-aware QAIL
+recovering accuracy at the flagship 128x128 point."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    EncoderConfig, ImcArrayConfig, ImcSimConfig, MemhdConfig, MemhdModel,
+    imc, qail,
+)
+from repro.imcsim import device as device_lib
+from repro.imcsim import (
+    imc_accuracy, noise_aware_finetune, recovery_experiment,
+    sweep_adc_bits, sweep_fault_rate, sweep_noise_sigma, tile_grid,
+)
+from repro.kernels import ops, ref
+from repro.kernels.am_search_imc import imc_cycles_for
+
+RNG = np.random.default_rng(11)
+
+
+def bipolar(shape):
+    return jnp.asarray(RNG.choice([-1.0, 1.0], size=shape).astype(
+        np.float32))
+
+
+class TestImcSimConfig:
+    def test_defaults(self):
+        sim = ImcSimConfig()
+        assert sim.clip == 128.0         # arr.rows
+        assert sim.adc_step == 256.0 / 2 ** 16
+        assert sim.ideal
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            ImcSimConfig(adc_bits=0)
+        with pytest.raises(ValueError):
+            ImcSimConfig(noise_sigma=-1.0)
+        with pytest.raises(ValueError):
+            ImcSimConfig(fault_p0=0.7, fault_p1=0.7)
+        with pytest.raises(ValueError):
+            ImcSimConfig(adc_clip=0.0)
+
+    def test_not_ideal_when_perturbed(self):
+        assert not ImcSimConfig(noise_sigma=0.1).ideal
+        assert not ImcSimConfig(fault_p0=0.1).ideal
+        assert not ImcSimConfig(drift_sigma=0.1).ideal
+
+    def test_hashable_static_jit_arg(self):
+        assert hash(ImcSimConfig()) == hash(ImcSimConfig())
+        assert ImcSimConfig() != ImcSimConfig(adc_bits=8)
+
+
+class TestAdcQuantize:
+    def test_identity_on_integers_when_step_le_1(self):
+        # 2*clip/2^bits <= 1: every integer partial sum is a code.
+        x = jnp.asarray(np.arange(-128, 129, dtype=np.float32))
+        for bits in (8, 12, 16):
+            np.testing.assert_array_equal(
+                np.asarray(ref.adc_quantize(x, bits, 128.0)),
+                np.asarray(x))
+
+    def test_coarse_quantization_snaps_to_codes(self):
+        x = jnp.asarray(np.linspace(-128, 128, 257, dtype=np.float32))
+        q = np.asarray(ref.adc_quantize(x, 3, 128.0))
+        step = 256.0 / 8
+        assert set(np.unique(q)) <= set(np.arange(-128, 129, step))
+
+    def test_clipping(self):
+        x = jnp.asarray([-1e4, 1e4, 0.0], dtype=jnp.float32)
+        q = np.asarray(ref.adc_quantize(x, 8, 128.0))
+        np.testing.assert_array_equal(q, [-128.0, 128.0, 0.0])
+
+
+class TestFidelityParityContract:
+    """Ideal sim (>=16-bit ADC, zero noise/faults/drift) == am_search,
+    bit for bit: indices, similarities, and tie-breaks."""
+
+    @pytest.mark.parametrize("b,d,c", [
+        (1, 128, 128), (8, 128, 128), (3, 256, 64), (5, 512, 300),
+        (2, 130, 257), (7, 120, 26), (300, 64, 26), (4, 9, 3),
+    ])
+    @pytest.mark.parametrize("use_kernel", [True, False])
+    def test_bit_exact_with_digital_search(self, b, d, c, use_kernel):
+        q, am = bipolar((b, d)), bipolar((c, d))
+        sim = ImcSimConfig(adc_bits=16)
+        gi, gs = ops.am_search_imc(q, am, sim=sim, use_kernel=use_kernel)
+        ui, us = ops.am_search(q, am)
+        wi, ws = ref.am_search(q, am.T)
+        np.testing.assert_array_equal(np.asarray(gi), np.asarray(ui))
+        np.testing.assert_array_equal(np.asarray(gs), np.asarray(us))
+        np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+        np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+
+    @pytest.mark.parametrize("use_kernel", [True, False])
+    def test_tie_breaking_first_wins(self, use_kernel):
+        # Duplicate centroids force ties across C-tile boundaries.
+        q = bipolar((4, 128))
+        am = jnp.concatenate([bipolar((1, 128))] * 150, axis=0)
+        gi, _ = ops.am_search_imc(q, am, sim=ImcSimConfig(),
+                                  use_kernel=use_kernel)
+        assert np.all(np.asarray(gi) == 0)
+
+    def test_eight_bit_adc_already_exact_at_128(self):
+        # step = 2*128/2^8 = 1: integer partial sums are codes.
+        q, am = bipolar((6, 128)), bipolar((90, 128))
+        gi, gs = ops.am_search_imc(q, am, sim=ImcSimConfig(adc_bits=8))
+        ui, us = ops.am_search(q, am)
+        np.testing.assert_array_equal(np.asarray(gi), np.asarray(ui))
+        np.testing.assert_array_equal(np.asarray(gs), np.asarray(us))
+
+    def test_non_square_array_geometry(self):
+        arr = ImcArrayConfig(rows=64, cols=32)
+        sim = ImcSimConfig(arr=arr, adc_bits=16)
+        q, am = bipolar((3, 200)), bipolar((70, 200))
+        gi, gs = ops.am_search_imc(q, am, sim=sim)
+        ui, us = ops.am_search(q, am)
+        np.testing.assert_array_equal(np.asarray(gi), np.asarray(ui))
+        np.testing.assert_array_equal(np.asarray(gs), np.asarray(us))
+
+
+class TestLossyKernelOracleParity:
+    """Kernel and pure-jnp oracle agree bit for bit under every
+    perturbation the ADC path models."""
+
+    @pytest.mark.parametrize("b,d,c,bits", [
+        (6, 300, 40, 4), (2, 128, 128, 3), (5, 130, 257, 5),
+        (3, 64, 26, 2),
+    ])
+    def test_quantized_with_offsets(self, b, d, c, bits):
+        sim = ImcSimConfig(adc_bits=bits, noise_sigma=0.3, fault_p0=0.02,
+                           fault_p1=0.02, drift_sigma=0.5, seed=3)
+        q, am = bipolar((b, d)), bipolar((c, d))
+        am_p, off = device_lib.perturb_am(jax.random.key(3), am, sim)
+        assert off is not None
+        gi, gs = ops.am_search_imc(q, am_p, sim=sim, offsets=off)
+        ri, rs = ops.am_search_imc(q, am_p, sim=sim, offsets=off,
+                                   use_kernel=False)
+        np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
+        np.testing.assert_array_equal(np.asarray(gs), np.asarray(rs))
+
+    def test_coarse_adc_changes_results(self):
+        # 2-bit ADC must actually distort similarities (sanity check
+        # that the fidelity knob does something).
+        q, am = bipolar((16, 128)), bipolar((128, 128))
+        _, gs = ops.am_search_imc(q, am, sim=ImcSimConfig(adc_bits=2))
+        _, us = ops.am_search(q, am)
+        assert not np.array_equal(np.asarray(gs), np.asarray(us))
+
+    def test_offsets_shape_validated(self):
+        q, am = bipolar((2, 128)), bipolar((128, 128))
+        with pytest.raises(ValueError):
+            ops.am_search_imc(q, am, sim=ImcSimConfig(),
+                              offsets=jnp.zeros((3, 3)))
+
+
+class TestGridContract:
+    """Kernel geometry == IMC cycle model, any array shape."""
+
+    def test_one_shot_for_paper_flagship(self):
+        assert imc_cycles_for((128, 128)) == 1
+        assert imc_cycles_for((128, 128)) == \
+            imc.map_memhd(128, 128, ImcArrayConfig()).cycles
+
+    @pytest.mark.parametrize("d,c", [
+        (128, 128), (512, 128), (1024, 1024), (256, 64), (130, 257),
+    ])
+    def test_matches_cost_model_128(self, d, c):
+        arr = ImcArrayConfig()
+        assert imc_cycles_for((d, c), arr.rows, arr.cols) == \
+            imc.map_memhd(d, c, arr).cycles
+        imc.assert_consistent_sim(d, c, arr)
+
+    @pytest.mark.parametrize("rows,cols", [(64, 64), (64, 32), (256, 128)])
+    def test_matches_cost_model_any_array(self, rows, cols):
+        arr = ImcArrayConfig(rows=rows, cols=cols)
+        for d, c in [(128, 128), (200, 70), (512, 256)]:
+            assert imc_cycles_for((d, c), rows, cols) == \
+                imc.map_memhd(d, c, arr).cycles
+            imc.assert_consistent_sim(d, c, arr)
+        assert imc.sim_grid(200, 70, ImcArrayConfig(rows=64, cols=32)) \
+            == (4, 3)
+
+
+class TestDeviceModels:
+    def test_seeded_determinism(self):
+        am = bipolar((64, 128))
+        sim = ImcSimConfig(noise_sigma=0.4, fault_p0=0.05, fault_p1=0.05,
+                           drift_sigma=0.2, seed=9)
+        a1, o1 = device_lib.perturb_am(jax.random.key(9), am, sim)
+        a2, o2 = device_lib.perturb_am(jax.random.key(9), am, sim)
+        np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+        np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+        a3, _ = device_lib.perturb_am(jax.random.key(10), am, sim)
+        assert not np.array_equal(np.asarray(a1), np.asarray(a3))
+
+    def test_zero_perturbation_is_identity(self):
+        am = bipolar((64, 128))
+        out, off = device_lib.perturb_am(jax.random.key(0), am,
+                                         ImcSimConfig())
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(am))
+        assert off is None
+
+    def test_stuck_at_values_and_rate(self):
+        am = bipolar((256, 256))
+        out = np.asarray(device_lib.stuck_at_faults(
+            jax.random.key(1), am, 0.1, 0.1))
+        assert set(np.unique(out)) <= {-1.0, 1.0}
+        flipped = (out != np.asarray(am)).mean()
+        # ~10% of cells flip (half the faults land on matching bits).
+        assert 0.05 < flipped < 0.15
+
+    def test_conductance_noise_scale(self):
+        am = jnp.ones((128, 128))
+        out = np.asarray(device_lib.conductance_noise(
+            jax.random.key(2), am, 0.5))
+        assert abs((out - 1.0).std() - 0.5) < 0.05
+
+    def test_tile_grid_and_drift(self):
+        sim = ImcSimConfig(arr=ImcArrayConfig(rows=64, cols=32),
+                           drift_sigma=1.0)
+        grid = tile_grid(200, 70, sim)
+        assert grid == (4, 3)
+        off = device_lib.tile_drift(jax.random.key(0), grid, 1.0)
+        assert off.shape == grid
+        assert np.any(np.asarray(off) != 0)
+
+    def test_device_instance_key_matches_deploy_split(self):
+        k = jax.random.key(5)
+        k_cells, _ = jax.random.split(k)
+        np.testing.assert_array_equal(
+            np.asarray(jax.random.key_data(
+                device_lib.device_instance_key(ImcSimConfig(seed=5)))),
+            np.asarray(jax.random.key_data(k_cells)))
+
+
+@pytest.fixture(scope="module")
+def trained(small_hdc_data):
+    """Flagship-geometry (128x128) model trained on the shared dataset."""
+    ds = small_hdc_data
+    enc = EncoderConfig(kind="projection", features=ds.features, dim=128)
+    amc = MemhdConfig(dim=128, columns=128, classes=ds.classes, epochs=6,
+                      kmeans_iters=10, lr=0.02)
+    m = MemhdModel.create(jax.random.key(0), enc, amc)
+    m, _ = m.fit(jax.random.key(1), ds.train_x, ds.train_y)
+    return ds, m
+
+
+class TestImcDeployment:
+    def test_ideal_sim_bit_exact_with_digital(self, trained):
+        ds, m = trained
+        dep = m.deploy(target="imc", sim=ImcSimConfig())
+        np.testing.assert_array_equal(
+            np.asarray(dep.predict(ds.test_x)),
+            np.asarray(m.predict(ds.test_x)))
+        assert dep.score(ds.test_x, ds.test_y) == \
+            m.score(ds.test_x, ds.test_y)
+
+    def test_default_sim_is_ideal(self, trained):
+        _, m = trained
+        dep = m.deploy(target="imc")
+        assert dep.sim.ideal and dep.tile_offsets is None
+
+    def test_flagship_one_shot_cycles(self, trained):
+        _, m = trained
+        dep = m.deploy(target="imc")
+        assert dep.cycles == 1
+        assert dep.cycles == dep.imc_cost().am.cycles
+
+    def test_same_seed_same_device(self, trained):
+        ds, m = trained
+        sim = ImcSimConfig(noise_sigma=0.5, fault_p0=0.02, seed=13)
+        p1 = np.asarray(m.deploy(target="imc", sim=sim).predict(
+            ds.test_x[:64]))
+        p2 = np.asarray(m.deploy(target="imc", sim=sim).predict(
+            ds.test_x[:64]))
+        np.testing.assert_array_equal(p1, p2)
+
+    def test_is_a_pytree(self, trained):
+        _, m = trained
+        dep = m.deploy(target="imc",
+                       sim=ImcSimConfig(drift_sigma=0.1, seed=2))
+        leaves = jax.tree_util.tree_leaves(dep)
+        rebuilt = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(dep), leaves)
+        assert rebuilt.sim == dep.sim
+        np.testing.assert_array_equal(np.asarray(rebuilt.am_analog),
+                                      np.asarray(dep.am_analog))
+
+    def test_bad_target_and_sim_combos(self, trained):
+        _, m = trained
+        with pytest.raises(ValueError):
+            m.deploy(target="fpga")
+        with pytest.raises(ValueError):
+            m.deploy(target="digital", sim=ImcSimConfig())
+
+    def test_noise_degrades_accuracy(self, trained):
+        ds, m = trained
+        clean = imc_accuracy(m, ds.test_x, ds.test_y, ImcSimConfig())
+        noisy = imc_accuracy(
+            m, ds.test_x, ds.test_y,
+            ImcSimConfig(noise_sigma=1.5, seed=7))
+        assert noisy < clean
+
+
+class TestRobustnessSweeps:
+    def test_sweep_rows(self, trained):
+        ds, m = trained
+        rows = sweep_adc_bits(m, ds.test_x, ds.test_y, bits=(16, 2))
+        assert [r["adc_bits"] for r in rows] == [16, 2]
+        assert rows[0]["accuracy"] >= rows[1]["accuracy"]
+        rows = sweep_noise_sigma(m, ds.test_x, ds.test_y,
+                                 sigmas=(0.0, 2.0))
+        assert rows[0]["accuracy"] > rows[1]["accuracy"]
+        rows = sweep_fault_rate(m, ds.test_x, ds.test_y, rates=(0.0, 0.3))
+        assert rows[0]["accuracy"] > rows[1]["accuracy"]
+
+    def test_report_is_jsonable(self, trained):
+        import json
+        ds, m = trained
+        from repro.imcsim import robustness_report
+        rep = robustness_report(m, ds.test_x[:80], ds.test_y[:80],
+                                adc_bits=(16,), noise_sigmas=(0.0,),
+                                fault_rates=(0.0,))
+        text = json.loads(json.dumps(rep))
+        assert text["geometry"] == "128x128"
+        assert text["cycles"] == 1
+        assert text["base_sim_accuracy"] == text["digital_accuracy"]
+
+
+class TestNoiseAwareQail:
+    def test_noise_key_required(self, trained):
+        _, m = trained
+        sim = ImcSimConfig(noise_sigma=0.5)
+        h = jnp.zeros((4, 128))
+        hb, qb, yb, mask = qail.prebatch(h, h, jnp.zeros(4, jnp.int32), 4)
+        with pytest.raises(ValueError, match="noise_key"):
+            qail.qail_epoch_scan(m.am_state, m.am_cfg, hb, qb, yb, mask,
+                                 sim=sim)
+
+    def test_fixed_mode_is_deterministic(self, trained):
+        ds, m = trained
+        sim = ImcSimConfig(noise_sigma=0.5, seed=3)
+        t1, _ = noise_aware_finetune(m, jax.random.key(2), ds.train_x,
+                                     ds.train_y, sim, epochs=2)
+        t2, _ = noise_aware_finetune(m, jax.random.key(2), ds.train_x,
+                                     ds.train_y, sim, epochs=2)
+        np.testing.assert_array_equal(
+            np.asarray(t1.am_state["binary"]),
+            np.asarray(t2.am_state["binary"]))
+
+    def test_noise_changes_training(self, trained):
+        ds, m = trained
+        sim = ImcSimConfig(noise_sigma=1.0, seed=3)
+        noisy, _ = noise_aware_finetune(m, jax.random.key(2), ds.train_x,
+                                        ds.train_y, sim, epochs=2)
+        clean, _ = m.fit(jax.random.key(2), ds.train_x, ds.train_y,
+                         init_method="keep", epochs=2)
+        assert not np.array_equal(np.asarray(noisy.am_state["fp"]),
+                                  np.asarray(clean.am_state["fp"]))
+
+    def test_keep_init_keeps_am(self, trained):
+        ds, m = trained
+        kept, hist = m.fit(jax.random.key(2), ds.train_x, ds.train_y,
+                           init_method="keep", epochs=0)
+        assert hist["init"] == []
+        np.testing.assert_array_equal(np.asarray(kept.am_state["fp"]),
+                                      np.asarray(m.am_state["fp"]))
+
+    def test_storage_noise_free_sim_rejected(self, trained):
+        # A sim whose only non-ideality is the ADC (or drift) would make
+        # the "noise-aware" fine-tune a silent no-op — it must raise.
+        ds, m = trained
+        with pytest.raises(ValueError, match="no-op"):
+            noise_aware_finetune(m, jax.random.key(2), ds.train_x,
+                                 ds.train_y, ImcSimConfig(adc_bits=3),
+                                 epochs=1)
+
+    def test_sequential_mode_rejects_noise(self, trained):
+        ds, m = trained
+        with pytest.raises(ValueError):
+            m.fit(jax.random.key(2), ds.train_x, ds.train_y,
+                  mode="sequential", noise_sim=ImcSimConfig(noise_sigma=1))
+
+    def test_fresh_mode_runs(self, trained):
+        ds, m = trained
+        sim = ImcSimConfig(noise_sigma=0.5, seed=3)
+        tuned, _ = noise_aware_finetune(m, jax.random.key(2), ds.train_x,
+                                        ds.train_y, sim, epochs=1,
+                                        noise_mode="fresh")
+        assert tuned.am_state["binary"].shape == (128, 128)
+
+
+class TestNoiseAwareRecovery:
+    """The acceptance contract: at the flagship 128x128 point, under the
+    documented setting (conductance sigma 0.5, 16-bit ADC, device seed
+    7), chip-in-the-loop noise-aware QAIL recovers >= half the accuracy
+    the analog readout lost."""
+
+    def test_recovers_half_the_loss(self, trained):
+        ds, m = trained
+        sim = ImcSimConfig(noise_sigma=0.5, seed=7)
+        rep = recovery_experiment(
+            m, jax.random.key(2), ds.train_x, ds.train_y,
+            ds.test_x, ds.test_y, sim, epochs=10)
+        assert rep["lost"] > 0.05, rep          # the setting really hurts
+        assert rep["recovered_frac"] >= 0.5, rep
+        assert rep["noisy_accuracy_after"] <= rep["digital_accuracy"] + 0.05

@@ -11,6 +11,9 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import am as am_lib
 from repro.core.encoding import binarize_query
+from repro.core.imc import (
+    ImcArrayConfig, map_basic, map_memhd, map_partitioned,
+)
 from repro.core.init import confusion_matrix, misprediction_counts
 from repro.kernels import ref
 
@@ -119,6 +122,52 @@ class TestConfusion:
         mis = misprediction_counts(conf)
         assert int(jnp.sum(mis)) == int(jnp.sum(pred != true))
         assert np.all(np.asarray(mis) >= 0)
+
+
+class TestImcMappingInvariants:
+    """Closed-form invariants of the core/imc.py cost model."""
+
+    @settings(**SETTINGS)
+    @given(st.integers(1, 4096), st.integers(1, 2048),
+           st.sampled_from([32, 64, 128, 256]),
+           st.sampled_from([32, 64, 128, 256]))
+    def test_utilization_never_exceeds_one(self, rows, cols, ar, ac):
+        arr = ImcArrayConfig(rows=ar, cols=ac)
+        c = map_basic(rows, cols, arr)
+        assert 0.0 < c.utilization <= 1.0
+
+    @settings(**SETTINGS)
+    @given(st.integers(1, 4), st.integers(1, 6), st.integers(1, 300),
+           st.sampled_from([32, 64, 128]))
+    def test_partitioning_saves_arrays_never_cycles(self, m, p, cols, a):
+        # The paper's Fig. 1-(b) point: with segment rows tiling the
+        # array exactly (rows = m*P*A), partitioning keeps the cycle
+        # count of the basic mapping and needs at most as many arrays.
+        arr = ImcArrayConfig(rows=a, cols=a)
+        rows = m * p * a
+        basic = map_basic(rows, cols, arr)
+        part = map_partitioned(rows, cols, p, arr)
+        assert part.cycles == basic.cycles   # never saves cycles...
+        assert part.arrays <= basic.arrays   # ...but saves arrays
+        assert part.utilization >= basic.utilization - 1e-12
+
+    @settings(**SETTINGS)
+    @given(st.sampled_from([32, 64, 128, 256, 512]))
+    def test_memhd_array_sized_am_is_one_shot(self, a):
+        arr = ImcArrayConfig(rows=a, cols=a)
+        c = map_memhd(a, a, arr)
+        assert c.cycles == 1 and c.arrays == 1
+        assert c.utilization == 1.0
+
+    @settings(**SETTINGS)
+    @given(st.integers(1, 2048), st.integers(1, 512),
+           st.integers(1, 2048), st.integers(1, 512))
+    def test_energy_monotone_in_tiles(self, r1, c1, r2, c2):
+        arr = ImcArrayConfig()
+        m1, m2 = map_basic(r1, c1, arr), map_basic(r2, c2, arr)
+        assert (m1.cycles <= m2.cycles) == \
+            (m1.energy_pj(arr) <= m2.energy_pj(arr))
+        assert m1.energy_pj(arr) == m1.cycles * arr.e_read_pass_pj
 
 
 class TestClassMaxSims:
