@@ -1,0 +1,102 @@
+"""Staged vs fused feature->prediction pipeline latency.
+
+The serving question behind ``kernels/encode_fused.py``: the staged
+path runs encode (float einsum), binarize, bitpack and packed search as
+FOUR host dispatches, materializing the (B, D) float hypervector and
+its bipolar binarization in HBM between stages; the fused path is ONE
+dispatch whose only intermediate is the (B, ceil(D/8)) packed rows.
+This bench measures exactly that difference: each staged stage is its
+own jitted call, synced like the pre-fusion serving loop, while the
+fused path is the single-jit chain ``predict_features`` serves.
+
+Both paths time the jnp oracles (interpret-mode Pallas is a
+correctness tool, not a throughput proxy — see kernel_bench.py); the
+computation per stage is identical, so the delta isolates dispatch +
+intermediate-materialization cost. Bit-exact (idx and sim, ties
+included) parity is asserted per geometry. Emits one JSON row per
+geometry plus the standard CSV rows.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, section, time_fn
+from repro.kernels import ref
+
+# The paper's deployment geometries (Table II): encode/pack overhead is
+# a real fraction of the pipeline here, which is where fusion pays.
+GEOMS = [(784, 128, 128), (784, 256, 256), (617, 512, 128),
+         (784, 512, 256)]  # (f, D, C)
+BATCH = 256
+
+
+def main() -> None:
+    section("Staged vs fused feature->prediction pipeline")
+    rng = np.random.default_rng(0)
+    total_staged = total_fused = 0.0
+    for f, d, c in GEOMS:
+        feats = jnp.asarray(rng.random((BATCH, f), dtype=np.float32))
+        proj = jnp.asarray(rng.choice([-1., 1.], size=(f, d))
+                           .astype(np.float32))
+        am = jnp.asarray(rng.choice([-1., 1.], size=(c, d))
+                         .astype(np.float32))
+        apt = ref.pack_rows(am).T
+
+        # Staged: four dispatches, float H + bipolar Q round-tripped
+        # through HBM, host sync at each stage boundary.
+        enc = jax.jit(lambda x, m: ref.binary_mvm(x, m))
+        binz = jax.jit(lambda h: jnp.where(h >= 0, 1.0, -1.0))
+        pack = jax.jit(ref.pack_rows)
+        search = jax.jit(lambda qp, a: ref.am_search_packed(qp, a, d))
+
+        def staged(x, m, a):
+            h = jax.block_until_ready(enc(x, m))
+            q = jax.block_until_ready(binz(h))
+            qp = jax.block_until_ready(pack(q))
+            return search(qp, a)
+
+        # Fused: the whole chain under one jit — the dispatch shape of
+        # ``predict_features`` / ``ops.search_from_features``.
+        fused = jax.jit(lambda x, m, a: ref.am_search_packed(
+            ref.encode_pack(x, m), a, d))
+
+        si, ss = staged(feats, proj, apt)
+        fi, fs = fused(feats, proj, apt)
+        np.testing.assert_array_equal(np.asarray(fi), np.asarray(si))
+        np.testing.assert_array_equal(np.asarray(fs), np.asarray(ss))
+
+        staged_us = time_fn(staged, feats, proj, apt, iters=7)
+        fused_us = time_fn(fused, feats, proj, apt, iters=7)
+        total_staged += staged_us
+        total_fused += fused_us
+
+        rec = {
+            "bench": "pipeline",
+            "geometry": f"f{f}/{d}x{c}",
+            "batch": BATCH,
+            "staged_us": round(staged_us, 1),
+            "fused_us": round(fused_us, 1),
+            "speedup": round(staged_us / fused_us, 2),
+            "staged_qps": round(BATCH / staged_us * 1e6, 1),
+            "fused_qps": round(BATCH / fused_us * 1e6, 1),
+            "float_h_bytes_saved": BATCH * d * 4,
+            "bit_exact": True,
+        }
+        print(json.dumps(rec), flush=True)
+        row(f"pipeline/f{f}/{d}x{c}", fused_us,
+            f"staged_us={staged_us:.1f};"
+            f"speedup={staged_us / fused_us:.2f}x")
+    # The point of the fusion: across the geometry sweep the
+    # single-dispatch path must beat the staged one. The printed rows
+    # are the measurement; the assert is a regression backstop with 10%
+    # headroom so scheduler noise on a loaded box can't fail the suite.
+    assert total_fused < total_staged * 1.10, (total_fused, total_staged)
+    row("pipeline/total", total_fused,
+        f"staged_us={total_staged:.1f};"
+        f"speedup={total_staged / total_fused:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

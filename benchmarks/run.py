@@ -15,6 +15,7 @@ BENCHES = [
     ("fig7", "benchmarks.fig7_energy"),
     ("kernel", "benchmarks.kernel_bench"),
     ("packed", "benchmarks.packed_vs_unpacked"),
+    ("pipeline", "benchmarks.pipeline_bench"),
     ("train_throughput", "benchmarks.train_throughput"),
     ("fig_robustness", "benchmarks.fig_robustness"),
     ("fig3", "benchmarks.fig3_accuracy_memory"),
@@ -24,8 +25,8 @@ BENCHES = [
     ("ablation", "benchmarks.ablations"),
     ("roofline", "benchmarks.roofline_report"),
 ]
-FAST = {"table2", "fig7", "kernel", "packed", "train_throughput",
-        "fig_robustness", "roofline"}
+FAST = {"table2", "fig7", "kernel", "packed", "pipeline",
+        "train_throughput", "fig_robustness", "roofline"}
 
 
 def main() -> None:

@@ -26,6 +26,23 @@ identical accuracy to the unpacked path. For the batched serving driver
 built on this artifact see ``repro/launch/serve_memhd.py``; for the
 kernel comparison see ``benchmarks/packed_vs_unpacked.py``.
 
+Serving raw features
+--------------------
+The deployed artifact answers raw feature requests in ONE dispatch:
+``predict_features`` chains the fused encode kernel (projection MVM +
+sign binarization + bitpack, accumulator in VMEM) straight into the
+XOR+popcount search — the float hypervector never touches HBM, only
+the (B, ceil(D/8)) packed rows pass between the two kernels:
+
+    preds = deployed.predict_features(test_feats)   # fused pipeline
+    # bit-exact with the staged encode -> binarize -> pack -> search
+
+The batched serving driver exposes the same path as
+``python -m repro.launch.serve_memhd --smoke --fused`` (requests of
+ragged feature blocks, greedy batching, latency/QPS JSON), and
+``python -m benchmarks.run --only pipeline`` measures what the fusion
+buys over the four-dispatch staged chain.
+
 Deploying to noisy IMC arrays
 -----------------------------
 The digital kernels are exact; real analog arrays are not. The
@@ -128,6 +145,16 @@ def main():
     print(f"packed deployment: {deployed.resident_am_bytes} B resident "
           f"AM ({deployed.am_memory_ratio:.0f}x smaller than "
           f"byte-per-cell), acc {acc_packed:.3f} == float {acc_float:.3f}")
+
+    # Serving raw features: the fused single-dispatch pipeline
+    # (encode + sign + bitpack kernel chained into the packed search)
+    # answers the same requests bit-exactly — no float H in HBM.
+    import numpy as np
+    pred_fused = np.asarray(deployed.predict_features(ds.test_x))
+    pred_staged = np.asarray(deployed.predict(ds.test_x))
+    assert (pred_fused == pred_staged).all()
+    print(f"fused feature serving: {pred_fused.shape[0]} requests, "
+          f"predictions bit-exact with the staged pipeline")
 
     # Deploying to noisy IMC arrays: an ideal simulated device is
     # bit-exact with the digital path...

@@ -102,15 +102,20 @@ def encode_id_level(params: EncoderParams, feats: Array,
     ids_pad = jnp.pad(ids, ((0, pad), (0, 0)))
     x_c = x_pad.reshape(x2.shape[0], n_chunks, chunk)
     ids_c = ids_pad.reshape(n_chunks, chunk, d)
+    # Padded feature columns gather lvls[0]; mask the gather itself to a
+    # neutral (zero) level so their contribution is zero by construction
+    # rather than via the zero-padded ID rows — H is invariant to the
+    # chunk size for any f (asserted in tests/test_kernel_parity.py).
+    valid_c = (jnp.arange(n_chunks * chunk) < f).reshape(n_chunks, chunk)
 
     def body(acc, args):
-        xc, idc = args  # (B, chunk), (chunk, D)
-        lv = lvls[xc]  # (B, chunk, D)
+        xc, idc, vc = args  # (B, chunk), (chunk, D), (chunk,)
+        lv = jnp.where(vc[None, :, None], lvls[xc], 0.0)  # (B, chunk, D)
         return acc + jnp.einsum("bcd,cd->bd", lv, idc), None
 
     acc0 = jnp.zeros((x2.shape[0], d), jnp.float32)
     acc, _ = jax.lax.scan(
-        body, acc0, (jnp.swapaxes(x_c, 0, 1), ids_c))
+        body, acc0, (jnp.swapaxes(x_c, 0, 1), ids_c, valid_c))
     return acc.reshape(*batch_shape, d)
 
 

@@ -431,6 +431,31 @@ class DeployedMemhd:
         q = encoding.encode_query(self.enc_params, self.enc_cfg, feats)
         return self.predict_query(q)
 
+    @property
+    def fusable(self) -> bool:
+        """True when the single-dispatch fused pipeline applies: packed
+        residence + MVM (projection) encoder + binarized queries."""
+        return (self.packed and self.enc_cfg.kind == "projection"
+                and self.enc_cfg.binarize_query)
+
+    def predict_features(self, feats: Array) -> Array:
+        """(B, f) raw features -> (B,) classes, fused single dispatch.
+
+        The whole pipeline — projection MVM, sign binarization, bitpack,
+        XOR+popcount search, ownership gather — runs as one jitted chain
+        of two Pallas kernels; the float hypervector never touches HBM
+        (only the (B, ceil(D/8)) packed rows pass between them).
+        Bit-exact with the staged ``predict``. Artifacts the fused
+        kernel cannot serve (unpacked residence, id_level encoder,
+        un-binarized queries) fall back to the staged path.
+        """
+        from repro.kernels import ops
+        if not self.fusable:
+            return self.predict(feats)
+        return ops.predict_from_features(
+            feats, self.enc_params["projection"], self.am_packed_t,
+            self.centroid_class, mode=self.mode)
+
     def score(self, feats: Array, labels: Array, batch: int = 4096,
               ) -> float:
         return eval_lib.batched_accuracy(self.predict, feats, labels, batch)

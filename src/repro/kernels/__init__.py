@@ -6,6 +6,9 @@ TPU analogue keeps the exact geometry (MXU tile == IMC array), so each
 kernel's grid size *is* the paper's cycle count (asserted in tests).
 
   binary_mvm       — tiled bipolar projection encoding (the EM)
+  encode_fused     — encoding MVM + sign + bitpack in one pass, chained
+                     into the packed search for a single-dispatch
+                     feature->prediction pipeline (no float H in HBM)
   am_search        — fused similarity + running arg-max (the AM, one-shot)
   am_search_packed — the same search over the uint8-packed 1-bit AM via
                      XOR + popcount (the deployed Table-I residence)

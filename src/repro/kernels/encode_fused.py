@@ -1,0 +1,185 @@
+"""Fused feature->packed-query encoding: projection MVM + sign + bitpack.
+
+The serving path used to stage the encoder: float einsum H = F @ M,
+round-trip the (B, D) float hypervector through HBM, binarize it, pack
+it, and only then dispatch the XOR+popcount search. But the only thing
+the search ever reads is one *bit* per dimension (sign(H) >= 0), so the
+float H is pure HBM traffic. This kernel closes that gap: it tiles the
+bipolar projection MVM over 128x128 blocks exactly like
+``binary_mvm.py`` (grid == the IMC cycle count of the encoder mapping),
+keeps the accumulator in VMEM across K slabs, and on the last K step
+emits the sign-binarized, uint8-packed query row directly — no float H
+ever touches HBM.
+
+    grid = (B/bB, D/128, f/128)      # f innermost: accumulation
+    out block per (i, j): (bB, 16) uint8 — one packed 128-dim slab
+
+Bit semantics are exactly the staged chain's
+``encode_query -> pack_rows``: a bit is 1 iff the accumulated H >= 0
+(``binarize_query`` maps sign(0) -> +1 and ``pack_bits`` packs +1 as
+bit 1), bits are LSB-first along D, and columns >= n_dims (the padded
+D tail) pack as 0 so they XOR-cancel against the identically padded AM.
+Validated bit-for-bit against ``ref.encode_pack`` in
+tests/test_kernel_parity.py.
+
+Parity caveat: for f > 128 the kernel sums the MVM in 128-wide K slabs
+while the staged einsum may reduce in a different order, so for
+*non-integer* features the two H values can differ by float rounding —
+a bit flips only when the true H sits within that rounding error of 0.
+Bipolar/integer features are exact (integer accumulation); float
+features agree for every tested geometry and seed, but "bit-exact" is
+a structural guarantee only where H is integer-valued.
+
+``search_from_features`` / ``predict_from_features`` chain this kernel
+straight into ``am_search_packed`` under ONE jit — the whole
+feature->prediction pipeline is a single host dispatch with only the
+(B, ceil(D/8)) packed rows materialized between the two kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.am_search_packed import am_search_packed
+
+Array = jax.Array
+
+TILE = 128          # IMC array dim == MXU tile dim
+TILE_P = TILE // 8  # packed bytes per 128-dim slab
+
+
+def _make_kernel(n_valid_dims: int):
+    """Bind the static valid-dimension count into the kernel body."""
+
+    def kernel(x_ref, w_ref, o_ref, acc_ref):
+        j, k = pl.program_id(1), pl.program_id(2)
+        nk = pl.num_programs(2)
+
+        @pl.when(k == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        acc_ref[...] += jnp.dot(
+            x_ref[...].astype(jnp.float32),
+            w_ref[...].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+
+        @pl.when(k == nk - 1)
+        def _sign_and_pack():
+            h = acc_ref[...]  # (bB, TILE)
+            col = j * TILE + jax.lax.broadcasted_iota(
+                jnp.int32, h.shape, 1)
+            # bit 1 iff H >= 0 (binarize_query: sign(0) -> +1, and
+            # pack_bits packs +1 as 1); padded D columns pack as 0.
+            bits = ((h >= 0) & (col < n_valid_dims)).astype(jnp.int32)
+            bits = bits.reshape(h.shape[0], TILE_P, 8)
+            weights = (2 ** jnp.arange(8, dtype=jnp.int32))
+            o_ref[...] = jnp.sum(bits * weights, axis=-1).astype(
+                jnp.uint8)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def encode_pack(feats: Array, projection: Array, *, block_b: int = 128,
+                interpret: bool | None = None) -> Array:
+    """Fused encode + sign + bitpack: (B, f) features -> (B, Dp) uint8.
+
+    Args:
+      feats: (B, f) float features.
+      projection: (f, D) bipolar projection matrix M.
+      block_b: batch tile height.
+      interpret: force Pallas interpret mode (defaults to True off-TPU).
+
+    Returns:
+      (B, ceil(D/8)) uint8 packed queries, LSB-first along D with tail
+      bits 0 — bit-identical to
+      ``pack_rows(binarize_query(feats @ projection))``.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, f = feats.shape
+    f2, d = projection.shape
+    assert f == f2, (feats.shape, projection.shape)
+
+    bb = min(block_b, max(b, 1))
+    pb = -b % bb
+    pf = -f % TILE
+    pd = -d % TILE
+    xp = jnp.pad(feats.astype(jnp.float32), ((0, pb), (0, pf)))
+    wp = jnp.pad(projection.astype(jnp.float32), ((0, pf), (0, pd)))
+    gb, gf, gd = (b + pb) // bb, (f + pf) // TILE, (d + pd) // TILE
+
+    out = pl.pallas_call(
+        _make_kernel(d),
+        grid=(gb, gd, gf),
+        in_specs=[
+            pl.BlockSpec((bb, TILE), lambda i, j, k: (i, k)),
+            pl.BlockSpec((TILE, TILE), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, TILE_P), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b + pb, gd * TILE_P), jnp.uint8),
+        scratch_shapes=[pltpu.VMEM((bb, TILE), jnp.float32)],
+        interpret=interpret,
+    )(xp, wp)
+    return out[:b, : -(-d // 8)]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "mode", "block_b", "interpret"))
+def search_from_features(feats: Array, projection: Array,
+                         am_packed_t: Array, *, mode: str = "popcount",
+                         block_b: int = 128,
+                         interpret: bool | None = None,
+                         ) -> tuple[Array, Array]:
+    """Single-dispatch feature->search chain: encode_pack |> am_search_packed.
+
+    Both Pallas kernels run inside one jit; the only intermediate is the
+    (B, Dp) packed query matrix — the float H never exists.
+
+    Args:
+      feats: (B, f) float features.
+      projection: (f, D) bipolar projection matrix.
+      am_packed_t: (Dp, C) uint8 packed transposed AM (``pack_am``).
+      mode: packed-search compute mode ("popcount" | "unpack").
+
+    Returns:
+      (best_idx, best_sim) as ``am_search_packed`` — bit-exact with the
+      staged encode_query -> pack_rows -> am_search_packed chain.
+    """
+    n_dims = projection.shape[1]
+    qp = encode_pack(feats, projection, block_b=block_b,
+                     interpret=interpret)
+    return am_search_packed(qp, am_packed_t, n_dims=n_dims, mode=mode,
+                            interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "mode", "block_b", "interpret"))
+def predict_from_features(feats: Array, projection: Array,
+                          am_packed_t: Array, centroid_class: Array, *,
+                          mode: str = "popcount", block_b: int = 128,
+                          interpret: bool | None = None) -> Array:
+    """Single-dispatch feature->class pipeline (§III-D end to end).
+
+    encode_pack |> am_search_packed |> ownership gather, one jit.
+    Returns (B,) int32 predicted classes.
+    """
+    idx, _ = search_from_features(feats, projection, am_packed_t,
+                                  mode=mode, block_b=block_b,
+                                  interpret=interpret)
+    return centroid_class[idx]
+
+
+def imc_cycles_for(feats_shape: tuple, projection_shape: tuple) -> int:
+    """Grid size of the f x D tiling — identical to ``binary_mvm``'s,
+    so the fused encoder keeps the encoder-mapping cycle count of
+    ``repro.core.imc.map_basic(f, D)`` (the pack epilogue rides the last
+    accumulation step for free)."""
+    f, d = projection_shape
+    return (-(-f // TILE)) * (-(-d // TILE))

@@ -19,6 +19,14 @@ from repro.kernels.am_search_packed import imc_cycles_for as packed_search_cycle
 from repro.kernels.am_search_packed import pack_rows as _pack_rows
 from repro.kernels.binary_mvm import binary_mvm as _binary_mvm
 from repro.kernels.binary_mvm import imc_cycles_for as mvm_cycles
+from repro.kernels.encode_fused import encode_pack as _encode_pack
+from repro.kernels.encode_fused import imc_cycles_for as encode_pack_cycles
+from repro.kernels.encode_fused import (
+    predict_from_features as _predict_from_features,
+)
+from repro.kernels.encode_fused import (
+    search_from_features as _search_from_features,
+)
 from repro.kernels.pack_bits import pack_bits as _pack_bits
 from repro.kernels.pack_bits import unpack_bits as _unpack_bits
 from repro.kernels.qail_update import qail_update as _qail_update
@@ -26,10 +34,11 @@ from repro.kernels.qail_update import qail_update as _qail_update
 Array = jax.Array
 
 __all__ = [
-    "encode_mvm", "am_search", "am_search_imc", "am_search_packed",
+    "encode_mvm", "encode_pack", "am_search", "am_search_imc",
+    "am_search_packed", "search_from_features", "predict_from_features",
     "pack_bits", "unpack_bits", "pack_rows", "qail_update",
     "search_cycles", "imc_search_cycles", "packed_search_cycles",
-    "mvm_cycles", "ref",
+    "mvm_cycles", "encode_pack_cycles", "ref",
 ]
 
 
@@ -42,6 +51,49 @@ def encode_mvm(feats: Array, projection: Array, *, use_kernel: bool = True,
     if not use_kernel:
         return ref.binary_mvm(feats, projection)
     return _binary_mvm(feats, projection)
+
+
+def encode_pack(feats: Array, projection: Array, *, use_kernel: bool = True,
+                ) -> Array:
+    """Fused encode + sign + bitpack: (B, f) -> (B, ceil(D/8)) uint8.
+
+    One kernel pass: the projection MVM accumulates in VMEM and emits
+    sign-binarized packed query rows directly — the float hypervector
+    never reaches HBM. Bit-identical to
+    ``pack_rows(binarize_query(feats @ projection))``.
+    """
+    if not use_kernel:
+        return ref.encode_pack(feats, projection)
+    return _encode_pack(feats, projection)
+
+
+def search_from_features(feats: Array, projection: Array,
+                         am_packed_t: Array, *, mode: str = "popcount",
+                         use_kernel: bool = True) -> tuple[Array, Array]:
+    """Single-dispatch feature->search chain over the packed AM.
+
+    feats: (B, f); projection: (f, D) bipolar; am_packed_t: (Dp, C)
+    uint8 (``pack_am``). Returns (best_idx, best_sim) bit-exact with
+    the staged encode_query -> pack_rows -> am_search_packed chain.
+    """
+    if not use_kernel:
+        qp = ref.encode_pack(feats, projection)
+        return ref.am_search_packed(qp, am_packed_t, projection.shape[1])
+    return _search_from_features(feats, projection, am_packed_t,
+                                 mode=mode)
+
+
+def predict_from_features(feats: Array, projection: Array,
+                          am_packed_t: Array, centroid_class: Array, *,
+                          mode: str = "popcount", use_kernel: bool = True,
+                          ) -> Array:
+    """End-to-end §III-D prediction from raw features, one dispatch:
+    fused encode/pack -> packed search -> ownership gather."""
+    if not use_kernel:
+        return ref.predict_from_features(feats, projection, am_packed_t,
+                                         centroid_class)
+    return _predict_from_features(feats, projection, am_packed_t,
+                                  centroid_class, mode=mode)
 
 
 def am_search(queries: Array, am: Array, *, use_kernel: bool = True,

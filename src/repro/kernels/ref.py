@@ -98,6 +98,31 @@ def am_search_packed(q_packed: Array, am_packed_t: Array, n_dims: int,
     return best_idx, best_sim
 
 
+def encode_pack(feats: Array, projection: Array) -> Array:
+    """Staged feature->packed-query chain: the ``encode_fused`` oracle.
+
+    H = feats @ projection (float32 accumulation), binarized with the
+    inference-path semantics (sign(0) -> +1, i.e. bit 1 iff H >= 0) and
+    packed LSB-first along D with tail bits 0 (``pack_rows``).
+
+    feats: (B, f); projection: (f, D) bipolar. Returns (B, ceil(D/8))
+    uint8.
+    """
+    h = binary_mvm(feats, projection)
+    q = jnp.where(h >= 0, 1.0, -1.0)
+    return pack_rows(q)
+
+
+def predict_from_features(feats: Array, projection: Array,
+                          am_packed_t: Array, centroid_class: Array,
+                          ) -> Array:
+    """Staged feature->class pipeline oracle: encode_pack + packed search
+    + ownership gather. Returns (B,) int32 predicted classes."""
+    qp = encode_pack(feats, projection)
+    idx, _ = am_search_packed(qp, am_packed_t, projection.shape[1])
+    return centroid_class[idx]
+
+
 def adc_quantize(x: Array, bits: int, clip: float) -> Array:
     """Symmetric mid-tread ADC transfer function.
 

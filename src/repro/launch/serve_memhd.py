@@ -1,19 +1,25 @@
 """Batched MEMHD serving driver: the packed-AM classification workload.
 
 ``launch/serve.py`` serves LM decode; this driver serves the paper's
-actual deployment scenario — a stream of classification requests against
-the resident 1-bit AM. Requests of ragged sizes are greedily packed into
-batches (a request never splits), each batch is zero-padded up to the
-next tile multiple so every launch hits the same compiled kernel shapes,
-and the whole batch goes through encode -> pack -> fused XOR+popcount
-associative search in one shot.
+actual deployment scenario — a stream of classification requests of raw
+feature rows against the resident 1-bit AM. Requests of ragged sizes
+are greedily packed into batches (a request never splits), each batch
+is zero-padded up to the next tile multiple so every launch hits the
+same compiled kernel shapes, and the whole batch goes through
+encode -> pack -> fused XOR+popcount associative search.
+
+``--fused`` serves each batch through ``predict_features`` — the
+single-dispatch chain of the fused encode/sign/bitpack kernel into the
+packed search (no float hypervector in HBM); the default serves the
+staged encode -> binarize -> pack -> search path. Predictions are
+bit-exact between the two modes.
 
 The report mirrors serve.py's JSON contract: wall time, per-batch
 latency percentiles, queries/s, plus the packed-residence accounting
 (resident AM bytes and the ~8x ratio vs byte-per-cell storage).
 
 Usage:
-  PYTHONPATH=src python -m repro.launch.serve_memhd --smoke \
+  PYTHONPATH=src python -m repro.launch.serve_memhd --smoke --fused \
       --requests 64 --max-batch 256
 """
 from __future__ import annotations
@@ -82,24 +88,28 @@ def pad_to_multiple(x: np.ndarray, tile: int) -> Tuple[np.ndarray, int]:
 
 def serve_batches(deployed, requests: Sequence[Request],
                   max_batch: int = 256, tile: int = TILE_B,
-                  warmup: bool = True,
+                  warmup: bool = True, fused: bool = False,
                   ) -> Tuple[Dict[int, np.ndarray], Dict]:
     """Run the request stream through the deployed model.
 
     ``warmup=True`` pre-compiles every distinct padded batch shape the
     stream will hit (tile padding keeps that set small) so the reported
-    latencies measure serving, not jit compilation.
+    latencies measure serving, not jit compilation. ``fused=True``
+    serves each batch through ``predict_features`` (the single-dispatch
+    fused pipeline) instead of the staged ``predict``; predictions are
+    bit-exact between the two.
 
     Returns (responses, stats): responses maps rid -> (n,) predicted
     classes; stats holds per-batch latencies and padding accounting.
     """
+    predict = (deployed.predict_features if fused else deployed.predict)
     batches = make_batches(requests, max_batch)
     if warmup:
         n_feats = requests[0].feats.shape[1] if requests else 0
         shapes = {-(-sum(r.size for r in b) // tile) * tile
                   for b in batches}
         for rows in sorted(shapes):
-            jax.block_until_ready(deployed.predict(
+            jax.block_until_ready(predict(
                 np.zeros((rows, n_feats), np.float32)))
     responses: Dict[int, np.ndarray] = {}
     lat_ms: List[float] = []
@@ -110,7 +120,7 @@ def serve_batches(deployed, requests: Sequence[Request],
         rows_real += n_valid
         rows_padded += padded.shape[0]
         t0 = time.perf_counter()
-        pred = jax.block_until_ready(deployed.predict(padded))
+        pred = jax.block_until_ready(predict(padded))
         lat_ms.append((time.perf_counter() - t0) * 1e3)
         pred = np.asarray(pred)[:n_valid]
         ofs = 0
@@ -143,6 +153,31 @@ def synthetic_requests(feats: np.ndarray, n_requests: int,
     return reqs
 
 
+def build_report(deployed, requests: Sequence[Request], stats: Dict,
+                 wall_s: float, fused: bool = False) -> Dict:
+    """Assemble the serving JSON report — the driver's output contract.
+
+    Key set and value types are stable (asserted in
+    tests/test_serving.py); downstream dashboards parse this.
+    """
+    n_rows = sum(r.size for r in requests)
+    return {
+        "workload": "memhd_classify",
+        "packed": deployed.packed,
+        "mode": deployed.mode if deployed.packed else "float",
+        "pipeline": "fused" if fused else "staged",
+        "geometry": f"{deployed.am_cfg.dim}x{deployed.am_cfg.columns}",
+        "requests": len(requests),
+        "rows": n_rows,
+        "wall_s": round(wall_s, 3),
+        "qps": round(len(requests) / wall_s, 1) if wall_s else 0.0,
+        "rows_per_s": round(n_rows / wall_s, 1) if wall_s else 0.0,
+        "resident_am_bytes": deployed.resident_am_bytes,
+        "am_memory_ratio": round(deployed.am_memory_ratio, 2),
+        **stats,
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -155,8 +190,14 @@ def main():
                     choices=["popcount", "unpack"])
     ap.add_argument("--unpacked", action="store_true",
                     help="serve the float AM instead (parity baseline)")
+    ap.add_argument("--fused", action="store_true",
+                    help="serve raw features through the single-dispatch "
+                         "fused encode->pack->search pipeline")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
+
+    if args.fused and args.unpacked:
+        ap.error("--fused needs the packed artifact (drop --unpacked)")
 
     from repro.core import EncoderConfig, MemhdConfig, MemhdModel
     from repro.data import load_dataset
@@ -176,26 +217,13 @@ def main():
                               args.max_size)
     # Warmup pass compiles every padded batch shape; the timed pass then
     # measures pure serving.
-    serve_batches(deployed, reqs, args.max_batch)
+    serve_batches(deployed, reqs, args.max_batch, fused=args.fused)
     t0 = time.time()
     responses, stats = serve_batches(deployed, reqs, args.max_batch,
-                                     warmup=False)
+                                     warmup=False, fused=args.fused)
     wall = time.time() - t0
-    n_rows = sum(r.size for r in reqs)
-    print(json.dumps({
-        "workload": "memhd_classify",
-        "packed": deployed.packed,
-        "mode": deployed.mode if deployed.packed else "float",
-        "geometry": f"{amc.dim}x{amc.columns}",
-        "requests": len(reqs),
-        "rows": n_rows,
-        "wall_s": round(wall, 3),
-        "qps": round(len(reqs) / wall, 1),
-        "rows_per_s": round(n_rows / wall, 1),
-        "resident_am_bytes": deployed.resident_am_bytes,
-        "am_memory_ratio": round(deployed.am_memory_ratio, 2),
-        **stats,
-    }, indent=1))
+    print(json.dumps(build_report(deployed, reqs, stats, wall,
+                                  fused=args.fused), indent=1))
     assert len(responses) == len(reqs)
 
 

@@ -1,4 +1,6 @@
 """Data pipeline: determinism, resume, dataset structure."""
+import os
+
 import numpy as np
 
 from repro.core.types import dataset_spec
@@ -30,6 +32,79 @@ class TestHdcDatasets:
         y = np.asarray(ds.train_y)
         counts = np.bincount(y, minlength=26)
         assert np.all(counts == 12)
+
+
+class TestRealDataLoader:
+    """The $MEMHD_DATA_DIR/<name>.npz branch of load_dataset.
+
+    Only the synthetic fallback was exercised before; these write a tmp
+    real-data fixture and assert the real path, its ``source`` tagging,
+    and the per-class subsampling applied on top of real data.
+    """
+
+    CLASSES = dataset_spec("mnist").classes
+
+    def _write_npz(self, root, name="mnist", per_class_train=6,
+                   per_class_test=4, features=12, seed=0):
+        rng = np.random.default_rng(seed)
+
+        def split(n_pc):
+            x = rng.random((n_pc * self.CLASSES, features),
+                           dtype=np.float32)
+            y = np.repeat(np.arange(self.CLASSES, dtype=np.int32), n_pc)
+            return x, y
+
+        train_x, train_y = split(per_class_train)
+        test_x, test_y = split(per_class_test)
+        np.savez(os.path.join(root, f"{name}.npz"),
+                 train_x=train_x, train_y=train_y,
+                 test_x=test_x, test_y=test_y)
+        return train_x, train_y, test_x, test_y
+
+    def test_real_path_and_source_tagging(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("MEMHD_DATA_DIR", str(tmp_path))
+        train_x, train_y, test_x, test_y = self._write_npz(tmp_path)
+        ds = load_dataset("mnist")
+        assert ds.source == "real" and ds.name == "mnist"
+        np.testing.assert_array_equal(np.asarray(ds.train_x), train_x)
+        np.testing.assert_array_equal(np.asarray(ds.train_y), train_y)
+        np.testing.assert_array_equal(np.asarray(ds.test_x), test_x)
+        np.testing.assert_array_equal(np.asarray(ds.test_y), test_y)
+        assert ds.features == train_x.shape[1]
+
+    def test_real_per_class_subsampling(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("MEMHD_DATA_DIR", str(tmp_path))
+        self._write_npz(tmp_path)
+        ds = load_dataset("mnist", train_per_class=3, test_per_class=2)
+        assert ds.source == "real"
+        train_counts = np.bincount(np.asarray(ds.train_y),
+                                   minlength=self.CLASSES)
+        test_counts = np.bincount(np.asarray(ds.test_y),
+                                  minlength=self.CLASSES)
+        assert np.all(train_counts == 3)
+        assert np.all(test_counts == 2)
+
+    def test_subsample_keeps_full_test_split_by_default(self, tmp_path,
+                                                        monkeypatch):
+        monkeypatch.setenv("MEMHD_DATA_DIR", str(tmp_path))
+        self._write_npz(tmp_path, per_class_test=4)
+        ds = load_dataset("mnist", train_per_class=2)  # no test_per_class
+        assert ds.train_x.shape[0] == 2 * self.CLASSES
+        assert ds.test_x.shape[0] == 4 * self.CLASSES
+
+    def test_missing_file_falls_back_to_synthetic(self, tmp_path,
+                                                  monkeypatch):
+        monkeypatch.setenv("MEMHD_DATA_DIR", str(tmp_path))
+        self._write_npz(tmp_path, name="mnist")
+        ds = load_dataset("isolet", train_per_class=4, test_per_class=2)
+        assert ds.source == "synthetic"
+        # ...and the real file next to it still loads as real.
+        assert load_dataset("mnist").source == "real"
+
+    def test_unset_data_dir_synthesizes(self, monkeypatch):
+        monkeypatch.delenv("MEMHD_DATA_DIR", raising=False)
+        ds = load_dataset("mnist", train_per_class=2, test_per_class=1)
+        assert ds.source == "synthetic"
 
 
 class TestLmPipeline:

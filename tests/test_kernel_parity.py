@@ -1,0 +1,296 @@
+"""Cross-kernel differential harness: every Pallas kernel vs its oracle.
+
+One shared geometry grid — including non-multiple-of-128 D/C/f and
+batch-1 edge cases — drives every kernel in ``repro.kernels`` against
+its pure-jnp ``ref`` oracle. Each per-kernel suite elsewhere tests its
+own corner semantics; this file is the drift gate: a change to any
+kernel, oracle, or the shared padding/tiling conventions must keep the
+whole matrix exactly in agreement (bipolar operands make every result
+integer-valued, so all assertions are bit-exact). CI runs exactly this
+file as a dedicated step so oracle drift fails fast.
+
+The packed paths additionally get hypothesis-generated geometries and
+bit patterns (pack/unpack roundtrips and search parity over random
+shapes), since byte-boundary bugs live in shapes nobody writes by hand.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import encoding
+from repro.core.types import EncoderConfig, ImcArrayConfig, ImcSimConfig
+from repro.kernels import ops, ref
+
+# Shared geometry grid: (batch, features, dim, columns). Covers the
+# paper's flagship points, ragged everything, and batch-1 serving.
+GEOMS = [
+    (1, 16, 128, 128),    # batch-1, flagship 128x128 AM
+    (8, 784, 128, 128),   # MNIST paper point
+    (3, 100, 130, 257),   # D and C just over a tile boundary
+    (5, 617, 512, 300),   # ISOLET f, ragged C
+    (2, 64, 120, 26),     # D and C under one tile
+    (1, 9, 9, 3),         # tiny batch-1 edge (sub-byte D)
+]
+
+
+def geom_rng(*key):
+    """Per-test RNG seeded by the test's own geometry (plus a salt per
+    call site), so inputs don't depend on which other tests ran first —
+    any failure reproduces under ``-k`` selection."""
+    return np.random.default_rng([1234, *key])
+
+
+def bipolar(rng, shape):
+    return jnp.asarray(rng.choice([-1.0, 1.0], size=shape)
+                       .astype(np.float32))
+
+
+def feats_mat(rng, b, f):
+    return jnp.asarray(rng.random((b, f), dtype=np.float32))
+
+
+@pytest.mark.parametrize("b,f,d,c", GEOMS)
+class TestKernelOracleParity:
+    """The differential sweep proper: kernel == oracle, bit for bit."""
+
+    def test_binary_mvm(self, b, f, d, c):
+        rng = geom_rng(b, f, d, 0)
+        x = bipolar(rng, (b, f))  # bipolar x: integer-exact accumulation
+        w = bipolar(rng, (f, d))
+        np.testing.assert_array_equal(
+            np.asarray(ops.encode_mvm(x, w)),
+            np.asarray(ref.binary_mvm(x, w)))
+        del c
+
+    def test_am_search(self, b, f, d, c):
+        rng = geom_rng(b, d, c, 1)
+        q, am = bipolar(rng, (b, d)), bipolar(rng, (c, d))
+        gi, gs = ops.am_search(q, am)
+        wi, ws = ref.am_search(q, am.T)
+        np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+        np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+        del f
+
+    @pytest.mark.parametrize("mode", ["popcount", "unpack"])
+    def test_am_search_packed(self, b, f, d, c, mode):
+        rng = geom_rng(b, d, c, 2)
+        q, am = bipolar(rng, (b, d)), bipolar(rng, (c, d))
+        qp = ops.pack_rows(q)
+        apt = ops.pack_rows(am).T
+        gi, gs = ops.am_search_packed(qp, apt, n_dims=d, mode=mode)
+        wi, ws = ref.am_search_packed(qp, apt, d)
+        np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+        np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+        del f
+
+    @pytest.mark.parametrize("adc_bits,rows,cols,with_offsets", [
+        (16, 128, 128, False),   # exact-parity regime
+        (6, 128, 128, False),    # lossy ADC: still kernel == oracle
+        (8, 96, 80, True),       # ragged array geometry + tile drift
+    ])
+    def test_am_search_imc(self, b, f, d, c, adc_bits, rows, cols,
+                           with_offsets):
+        rng = geom_rng(b, d, c, adc_bits, rows, cols)
+        q, am = bipolar(rng, (b, d)), bipolar(rng, (c, d))
+        sim = ImcSimConfig(arr=ImcArrayConfig(rows=rows, cols=cols),
+                           adc_bits=adc_bits)
+        offsets = None
+        if with_offsets:
+            offsets = jnp.asarray(rng.normal(
+                0, 0.3, (-(-d // rows), -(-c // cols))).astype(np.float32))
+        gi, gs = ops.am_search_imc(q, am, sim=sim, offsets=offsets)
+        wi, ws = ref.am_search_imc(
+            q, am.T, tile_rows=rows, tile_cols=cols, adc_bits=adc_bits,
+            adc_clip=sim.clip, offsets=offsets)
+        np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+        np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+        del f
+
+    def test_qail_update(self, b, f, d, c):
+        k = max(2, c // 3)
+        rng = geom_rng(b, d, c, 3)
+        q = bipolar(rng, (b, d))
+        upd = bipolar(rng, (b, d))  # update_with="binary": integer-exact
+        am_t = bipolar(rng, (c, d)).T
+        owners = jnp.asarray(rng.integers(0, k, size=(c,)), jnp.int32)
+        # Every class needs a centroid for Eq. (5) to have a target.
+        owners = owners.at[:k].set(jnp.arange(k, dtype=jnp.int32))
+        mask = jnp.asarray((rng.random(b) < 0.8).astype(np.float32))
+        if b > 1:  # keep at least one padded row in the sweep
+            mask = mask.at[-1].set(0.0)
+        labels = jnp.where(
+            mask > 0,
+            jnp.asarray(rng.integers(0, k, size=(b,)), jnp.int32), -1)
+        gd, gm = ops.qail_update(q, upd, am_t, owners, labels, mask,
+                                 lr=0.5)
+        wd, wm = ref.qail_update_delta(q, upd, am_t, owners, labels,
+                                       mask, 0.5)
+        np.testing.assert_array_equal(np.asarray(gd), np.asarray(wd))
+        np.testing.assert_array_equal(np.asarray(gm), np.asarray(wm))
+        del f
+
+    def test_encode_fused(self, b, f, d, c):
+        rng = geom_rng(b, f, d, 4)
+        x, w = feats_mat(rng, b, f), bipolar(rng, (f, d))
+        got = ops.encode_pack(x, w)
+        want = ref.encode_pack(x, w)
+        assert got.dtype == jnp.uint8 and got.shape == (b, -(-d // 8))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        del c
+
+    @pytest.mark.parametrize("mode", ["popcount", "unpack"])
+    def test_fused_chain_matches_staged(self, b, f, d, c, mode):
+        """predict_from_features == encode_query -> pack -> search,
+        bit-exact including tie resolution (idx asserted, not just the
+        class)."""
+        rng = geom_rng(b, f, d, c, 5)
+        x, w = feats_mat(rng, b, f), bipolar(rng, (f, d))
+        am = bipolar(rng, (c, d))
+        apt = ops.pack_rows(am).T
+        owners = jnp.asarray(rng.integers(0, 10, size=(c,)), jnp.int32)
+
+        # Staged chain, stage by stage (the pre-fusion serving path).
+        h = jnp.dot(x, w)
+        q = encoding.binarize_query(h)
+        qp = ops.pack_rows(q)
+        si, ss = ops.am_search_packed(qp, apt, n_dims=d, mode=mode)
+
+        fi, fs = ops.search_from_features(x, w, apt, mode=mode)
+        np.testing.assert_array_equal(np.asarray(fi), np.asarray(si))
+        np.testing.assert_array_equal(np.asarray(fs), np.asarray(ss))
+        pred = ops.predict_from_features(x, w, apt, owners, mode=mode)
+        np.testing.assert_array_equal(np.asarray(pred),
+                                      np.asarray(owners)[np.asarray(si)])
+
+
+class TestEncodeFusedSemantics:
+    """Fused-encoder corners the sweep can't hit."""
+
+    def test_tail_bits_are_zero(self):
+        # D=9 -> 2 bytes; the 7 tail bits must pack as 0 so they
+        # XOR-cancel against the identically padded AM.
+        rng = geom_rng(4, 16, 9, 6)
+        x, w = feats_mat(rng, 4, 16), bipolar(rng, (16, 9))
+        p = np.asarray(ops.encode_pack(x, w))
+        assert np.all(p[:, 1] < 2)  # only bit 0 of byte 1 may be set
+
+    def test_sign_zero_packs_as_one(self):
+        # H == 0 rows: binarize_query maps sign(0) -> +1 -> bit 1.
+        x = jnp.zeros((2, 8), jnp.float32)
+        w = bipolar(geom_rng(2, 8, 16, 7), (8, 16))
+        p = np.asarray(ops.encode_pack(x, w))
+        assert np.all(p == 0xFF)
+
+    def test_cycle_model_matches_mvm(self):
+        from repro.core import imc
+        from repro.kernels.binary_mvm import imc_cycles_for as mvm_cycles
+        from repro.kernels.encode_fused import imc_cycles_for
+        assert imc_cycles_for((8, 784), (784, 1024)) == \
+            mvm_cycles((8, 784), (784, 1024))
+        assert imc_cycles_for((8, 784), (784, 1024)) == \
+            imc.map_basic(784, 1024, imc.ImcArrayConfig()).cycles
+
+
+class TestEncoderChunkInvariance:
+    """encode_id_level: H must not depend on the feature chunking —
+    padded feature columns gather a neutral (masked-to-zero) level, so
+    any chunk size gives the identical (exact, +-1-integer) H."""
+
+    @pytest.mark.parametrize("f,chunk", [
+        (100, 128), (100, 32), (100, 7), (128, 128), (130, 128),
+    ])
+    def test_chunk_size_invariance(self, f, chunk):
+        cfg = EncoderConfig(kind="id_level", features=f, dim=64,
+                            levels=8)
+        params = encoding.init_id_level(jax.random.key(0), cfg)
+        x = jnp.asarray(geom_rng(f, chunk, 8).random(
+            (5, f), dtype=np.float32))
+        base = encoding.encode_id_level(params, x, chunk=f)  # no pad
+        got = encoding.encode_id_level(params, x, chunk=chunk)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+
+    def test_padded_columns_are_neutral_even_for_nonfinite_levels(self):
+        # The gather itself is masked: a poisoned lvls[0] must not leak
+        # through the padded columns (0 * nan == nan would).
+        cfg = EncoderConfig(kind="id_level", features=10, dim=16,
+                            levels=4)
+        params = encoding.init_id_level(jax.random.key(1), cfg)
+        x = jnp.asarray(geom_rng(3, 10, 9).random(
+            (3, 10), dtype=np.float32))
+        poisoned = dict(params, levels=params["levels"].at[0].set(
+            jnp.where(params["levels"][0] > 0, jnp.nan,
+                      params["levels"][0])))
+        # Keep valid columns away from level 0 so only the padded
+        # columns ever gather the poisoned level.
+        x_hi = 0.75 + 0.25 * x  # quantizes to levels >= 2
+        want = encoding.encode_id_level(params, x_hi, chunk=10)
+        got = encoding.encode_id_level(poisoned, x_hi, chunk=128)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# -- hypothesis-generated packed-path inputs --------------------------------
+# Guarded (not importorskip) so a missing hypothesis skips ONLY the
+# property class — the deterministic differential sweep above must run
+# everywhere.
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - dev extra, see requirements-dev
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    SETTINGS = dict(max_examples=20, deadline=None)
+
+    @st.composite
+    def packed_geometry(draw):
+        """Random (B, D, C, seed); D lands on any byte boundary."""
+        b = draw(st.integers(1, 8))
+        d = draw(st.integers(1, 96))
+        c = draw(st.integers(1, 40))
+        seed = draw(st.integers(0, 2**31 - 1))
+        return b, d, c, seed
+
+    class TestPackedPathProperties:
+        @settings(**SETTINGS)
+        @given(packed_geometry())
+        def test_pack_roundtrip(self, geom):
+            b, d, _, seed = geom
+            rng = np.random.default_rng(seed)
+            x = jnp.asarray(rng.choice([-1.0, 1.0], size=(b, d))
+                            .astype(np.float32))
+            p = ops.pack_rows(x)
+            np.testing.assert_array_equal(np.asarray(p),
+                                          np.asarray(ref.pack_rows(x)))
+            u = np.asarray(ops.unpack_bits(p))
+            np.testing.assert_array_equal(u[:, :d], np.asarray(x))
+            assert np.all(u[:, d:] == -1.0)  # tail bits packed as 0
+
+        @settings(**SETTINGS)
+        @given(packed_geometry(), st.sampled_from(["popcount", "unpack"]))
+        def test_packed_search_parity(self, geom, mode):
+            b, d, c, seed = geom
+            rng = np.random.default_rng(seed)
+            q = jnp.asarray(rng.choice([-1.0, 1.0], size=(b, d))
+                            .astype(np.float32))
+            am = jnp.asarray(rng.choice([-1.0, 1.0], size=(c, d))
+                             .astype(np.float32))
+            qp = ops.pack_rows(q)
+            apt = ops.pack_rows(am).T
+            gi, gs = ops.am_search_packed(qp, apt, n_dims=d, mode=mode)
+            wi, ws = ref.am_search(q, am.T)
+            np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+            np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+
+        @settings(**SETTINGS)
+        @given(packed_geometry())
+        def test_encode_pack_parity(self, geom):
+            b, d, c, seed = geom
+            f = max(1, c)  # reuse the C draw as a ragged feature count
+            rng = np.random.default_rng(seed)
+            x = jnp.asarray(rng.random((b, f), dtype=np.float32))
+            w = jnp.asarray(rng.choice([-1.0, 1.0], size=(f, d))
+                            .astype(np.float32))
+            np.testing.assert_array_equal(
+                np.asarray(ops.encode_pack(x, w)),
+                np.asarray(ref.encode_pack(x, w)))

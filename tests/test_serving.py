@@ -1,0 +1,133 @@
+"""serve_memhd driver: batcher accounting, fused-vs-staged parity on
+ragged request streams, and the JSON report schema contract."""
+import jax
+import numpy as np
+import pytest
+
+from repro.launch.serve_memhd import (Request, build_report, make_batches,
+                                      serve_batches, synthetic_requests)
+
+
+@pytest.fixture(scope="module")
+def served(small_hdc_data):
+    """A small trained model deployed packed (fused-servable)."""
+    from repro.core import EncoderConfig, MemhdConfig, MemhdModel
+    ds = small_hdc_data
+    enc = EncoderConfig(kind="projection", features=ds.features, dim=128)
+    amc = MemhdConfig(dim=128, columns=32, classes=ds.classes,
+                      epochs=1, kmeans_iters=3)
+    m = MemhdModel.create(jax.random.key(0), enc, amc)
+    m, _ = m.fit(jax.random.key(1), ds.train_x, ds.train_y)
+    return ds, m, m.deploy(packed=True)
+
+
+def _reqs(sizes, f=4):
+    return [Request(rid=i, feats=np.zeros((n, f), np.float32))
+            for i, n in enumerate(sizes)]
+
+
+class TestBatcherAccounting:
+    """Padding accounting of the greedy batcher, end to end."""
+
+    def test_pad_accounting_exact(self, served):
+        ds, _, dep = served
+        reqs = synthetic_requests(np.asarray(ds.test_x), n_requests=7,
+                                  max_size=11, seed=5)
+        _, stats = serve_batches(dep, reqs, max_batch=16, tile=8)
+        sizes = [r.size for r in reqs]
+        batches = make_batches(reqs, 16)
+        want_padded = sum(-(-sum(r.size for r in b) // 8) * 8
+                          for b in batches)
+        assert stats["rows_real"] == sum(sizes)
+        assert stats["rows_padded"] == want_padded
+        assert stats["batches"] == len(batches)
+        assert stats["pad_overhead"] == round(
+            want_padded / sum(sizes) - 1, 3)
+        assert stats["lat_ms_total"] >= 0
+
+    def test_every_batch_tile_aligned(self, served):
+        ds, _, dep = served
+        reqs = synthetic_requests(np.asarray(ds.test_x), n_requests=5,
+                                  max_size=13, seed=2)
+        _, stats = serve_batches(dep, reqs, max_batch=32, tile=8)
+        assert stats["rows_padded"] % 8 == 0
+        assert stats["rows_padded"] >= stats["rows_real"]
+
+    def test_batcher_never_splits_requests(self):
+        batches = make_batches(_reqs([5, 5, 5, 20, 3]), 12)
+        flat = [r.rid for b in batches for r in b]
+        assert sorted(flat) == [0, 1, 2, 3, 4]  # every request, once
+        assert all(sum(r.size for r in b) <= 12
+                   for b in batches if len(b) > 1)
+
+
+class TestFusedServing:
+    """--fused serving: single-dispatch pipeline, bit-exact with staged."""
+
+    def test_fused_vs_staged_parity_on_ragged_stream(self, served):
+        ds, _, dep = served
+        reqs = synthetic_requests(np.asarray(ds.test_x), n_requests=11,
+                                  max_size=9, seed=7)
+        staged, s_stats = serve_batches(dep, reqs, max_batch=24)
+        fused, f_stats = serve_batches(dep, reqs, max_batch=24,
+                                       fused=True)
+        assert staged.keys() == fused.keys()
+        for rid in staged:
+            np.testing.assert_array_equal(staged[rid], fused[rid])
+        # Identical batching either way — only the kernel path differs.
+        assert s_stats["rows_padded"] == f_stats["rows_padded"]
+        assert s_stats["batches"] == f_stats["batches"]
+
+    def test_predict_features_matches_predict(self, served):
+        ds, m, dep = served
+        got = np.asarray(dep.predict_features(ds.test_x[:40]))
+        np.testing.assert_array_equal(got,
+                                      np.asarray(dep.predict(
+                                          ds.test_x[:40])))
+        np.testing.assert_array_equal(got,
+                                      np.asarray(m.predict(
+                                          ds.test_x[:40])))
+
+    def test_unfusable_artifact_falls_back_to_staged(self, served):
+        ds, m, _ = served
+        dep_u = m.deploy(packed=False)
+        assert not dep_u.fusable
+        np.testing.assert_array_equal(
+            np.asarray(dep_u.predict_features(ds.test_x[:16])),
+            np.asarray(dep_u.predict(ds.test_x[:16])))
+
+
+class TestReportSchema:
+    """The JSON report is a parsing contract; its key set is frozen."""
+
+    KEYS = {
+        "workload", "packed", "mode", "pipeline", "geometry", "requests",
+        "rows", "wall_s", "qps", "rows_per_s", "resident_am_bytes",
+        "am_memory_ratio", "batches", "rows_real", "rows_padded",
+        "pad_overhead", "lat_ms_p50", "lat_ms_p95", "lat_ms_total",
+    }
+
+    def test_schema_stable(self, served):
+        ds, _, dep = served
+        reqs = synthetic_requests(np.asarray(ds.test_x), n_requests=4,
+                                  max_size=6, seed=1)
+        for fused in (False, True):
+            _, stats = serve_batches(dep, reqs, max_batch=16,
+                                     fused=fused)
+            rep = build_report(dep, reqs, stats, wall_s=0.25,
+                               fused=fused)
+            assert set(rep) == self.KEYS
+            assert rep["pipeline"] == ("fused" if fused else "staged")
+            assert rep["workload"] == "memhd_classify"
+            assert rep["rows"] == sum(r.size for r in reqs)
+            assert rep["qps"] == round(len(reqs) / 0.25, 1)
+
+    def test_unpacked_report_mode(self, served):
+        ds, m, _ = served
+        dep_u = m.deploy(packed=False)
+        reqs = synthetic_requests(np.asarray(ds.test_x), n_requests=2,
+                                  max_size=4, seed=0)
+        _, stats = serve_batches(dep_u, reqs, max_batch=8)
+        rep = build_report(dep_u, reqs, stats, wall_s=0.1)
+        assert set(rep) == self.KEYS
+        assert rep["mode"] == "float" and rep["packed"] is False
