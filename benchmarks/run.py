@@ -17,6 +17,7 @@ BENCHES = [
     ("packed", "benchmarks.packed_vs_unpacked"),
     ("pipeline", "benchmarks.pipeline_bench"),
     ("train_throughput", "benchmarks.train_throughput"),
+    ("serve_scaling", "benchmarks.serve_scaling"),
     ("fig_robustness", "benchmarks.fig_robustness"),
     ("fig3", "benchmarks.fig3_accuracy_memory"),
     ("fig4", "benchmarks.fig4_heatmap"),

@@ -1,0 +1,188 @@
+"""Multi-device serving scaling sweep: aggregate QPS vs device count.
+
+Sweeps 1 -> 8 forced host devices x {packed, imc} deployment backends
+through the REAL serving stack (``ShardedArtifact`` under the
+``serve_batches`` double-buffered driver) at a fixed per-device row
+budget (weak scaling), and asserts near-linear aggregate-QPS scaling on
+the packed path (>= 3x at 8 devices vs 1).
+
+jax pins the device count at first init, so every (devices, backend)
+point runs in a fresh subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` — the same trick
+the multi-device tests use.
+
+Aggregate-QPS accounting on the emulated backend
+------------------------------------------------
+``--xla_force_host_platform_device_count`` devices on the CPU backend
+execute their partitions one after another, so the measured wall time
+is the SUM of the per-device partition times — concurrency is the one
+thing host emulation cannot give. The serving program, however, is
+row-parallel with ZERO cross-device communication (no collectives in
+the compiled HLO — asserted per point below), so on concurrent devices
+the wall is the max (== mean, balanced shards) partition time instead
+of the sum:
+
+    aggregate_qps = emulated_qps * n_devices
+
+Every point reports both numbers (``qps_emulated`` is the serialized
+wall-clock rate; ``qps`` is the concurrent-device aggregate), plus the
+bit-exactness of the sharded predictions vs the single-device artifact.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+DEVICE_COUNTS = (1, 2, 4, 8)
+BACKENDS = ("packed", "imc")
+ROWS_PER_DEVICE = 64
+N_BATCHES = 12
+FEATURES, DIM, COLUMNS, CLASSES = 64, 128, 128, 10
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+REPO_SRC = os.path.join(REPO_ROOT, "src")
+
+
+def _build_model():
+    """An untrained model with a random AM — throughput needs no fit."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import EncoderConfig, MemhdConfig, MemhdModel
+    from repro.core import am as am_lib
+
+    enc = EncoderConfig(kind="projection", features=FEATURES, dim=DIM)
+    amc = MemhdConfig(dim=DIM, columns=COLUMNS, classes=CLASSES)
+    model = MemhdModel.create(jax.random.key(0), enc, amc)
+    rng = np.random.default_rng(0)
+    fp = jnp.asarray(rng.normal(size=(COLUMNS, DIM)).astype(np.float32))
+    owners = jnp.asarray(np.arange(COLUMNS) % CLASSES, np.int32)
+    state = am_lib.make_am_state(fp, owners, amc.threshold)
+    return dataclasses.replace(model, am_state=state)
+
+
+def _worker(n_devices: int, backend: str) -> None:
+    """One sweep point, in its own forced-device-count process."""
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.deploy import ShardedArtifact
+    from repro.launch.serve_memhd import Request, serve_batches
+
+    assert jax.device_count() == n_devices, (
+        jax.device_count(), n_devices)
+    model = _build_model()
+    dep = model.deploy(target=backend)
+    sharded = ShardedArtifact(dep, devices=n_devices)
+
+    rows = ROWS_PER_DEVICE * n_devices
+    rng = np.random.default_rng(1)
+    reqs = [Request(rid=i, feats=rng.normal(
+        size=(rows, FEATURES)).astype(np.float32))
+        for i in range(N_BATCHES)]
+
+    # Bit-exactness of the sharded path vs the plain artifact.
+    probe = reqs[0].feats[: ROWS_PER_DEVICE * n_devices - 3]  # ragged
+    bit_exact = bool((np.asarray(sharded.predict(probe))
+                      == np.asarray(dep.predict(probe))).all())
+
+    # The serving program must be communication-free — that is what
+    # makes the concurrent-device projection below sound.
+    lowered = sharded._sharded_fn("predict").lower(
+        sharded.artifact, reqs[0].feats)
+    hlo = lowered.compile().as_text().lower()
+    collectives = any(tok in hlo for tok in
+                      ("all-reduce", "collective-permute", "all-to-all",
+                       "all-gather", "reduce-scatter"))
+
+    serve_batches(sharded, reqs, max_batch=rows)  # warmup/compile
+    t0 = time.perf_counter()
+    responses, stats = serve_batches(sharded, reqs, max_batch=rows,
+                                     warmup=False, depth=2)
+    wall = time.perf_counter() - t0
+    assert len(responses) == N_BATCHES
+    total_rows = N_BATCHES * rows
+    emulated = total_rows / wall
+    print("RESULT " + json.dumps({
+        "backend": backend,
+        "devices": n_devices,
+        "rows": total_rows,
+        "wall_s": round(wall, 4),
+        "lat_ms_p50": stats["lat_ms_p50"],
+        "qps_emulated": round(emulated, 1),
+        "qps": round(emulated * n_devices, 1),
+        "bit_exact": bit_exact,
+        "collectives": collectives,
+    }))
+
+
+def _run_point(n_devices: int, backend: str) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={n_devices}")
+    env["PYTHONPATH"] = REPO_SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.serve_scaling", "--worker",
+         str(n_devices), backend],
+        env=env, cwd=REPO_ROOT, capture_output=True, text=True,
+        timeout=560)
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"serve_scaling worker d={n_devices} {backend} failed\n"
+            f"STDOUT:\n{r.stdout[-2000:]}\nSTDERR:\n{r.stderr[-2000:]}")
+    for line in r.stdout.splitlines():
+        if line.startswith("RESULT "):
+            return json.loads(line[len("RESULT "):])
+    raise RuntimeError(f"no RESULT line in worker output:\n{r.stdout}")
+
+
+def main() -> None:
+    results = {}
+    for backend in BACKENDS:
+        for n in DEVICE_COUNTS:
+            rep = results[(backend, n)] = _run_point(n, backend)
+            us = rep["wall_s"] / N_BATCHES * 1e6
+            print(f"serve_scaling/{backend}_d{n},{us:.0f},"
+                  f"qps={rep['qps']:.0f}"
+                  f"(emulated {rep['qps_emulated']:.0f})", flush=True)
+            assert rep["bit_exact"], (
+                f"sharded {backend} d={n} not bit-exact")
+            assert not rep["collectives"], (
+                f"serving program has collectives at {backend} d={n}; "
+                "the aggregate-QPS projection would be invalid")
+
+    # Near-linear aggregate scaling on the packed path: >= 3x at 8 vs 1.
+    top = max(DEVICE_COUNTS)
+    lo = results[("packed", 1)]["qps"]
+    hi = results[("packed", top)]["qps"]
+    ratio = hi / lo
+    print(f"serve_scaling/packed_scaling_ratio,0,{ratio:.2f}x_at_"
+          f"{top}_devices")
+    assert ratio >= 3.0, (
+        f"packed aggregate QPS scaled only {ratio:.2f}x at "
+        f"{top} devices (need >= 3x)")
+    # The aggregate number is a projection (emulated_qps * N), so it
+    # alone cannot catch real sharding overhead. Separately bound the
+    # serialized wall-clock rate: per-row service time at N devices
+    # must stay within 2x of the single-device rate (measured ~1x on
+    # the packed path — sharding adds no per-row work).
+    emu_ratio = (results[("packed", top)]["qps_emulated"]
+                 / results[("packed", 1)]["qps_emulated"])
+    print(f"serve_scaling/packed_emulated_ratio,0,{emu_ratio:.2f}x")
+    assert emu_ratio >= 0.5, (
+        f"sharding overhead: serialized per-row throughput fell to "
+        f"{emu_ratio:.2f}x of single-device at {top} devices")
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "--worker":
+        _worker(int(sys.argv[2]), sys.argv[3])
+    else:
+        main()

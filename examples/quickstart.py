@@ -7,59 +7,58 @@ model.
 
   PYTHONPATH=src python examples/quickstart.py
 
-1-bit deployment
-----------------
-The paper's Table I counts the AM at 1 bit per cell; ``deploy`` makes
-that the actual serving artifact. The trained binary AM is packed 8
-cells/byte into a (ceil(D/8), C) uint8 residence and queries are
-answered by the fused XOR+popcount kernel — bit-exact with the float
-path, with the resident AM 8x smaller than byte-per-cell storage (32x
-vs the float32 training copy):
-
-    deployed = model.deploy(packed=True)      # freeze + pack
-    preds    = deployed.predict(test_feats)   # XOR+popcount search
-    deployed.resident_am_bytes                # C*D/8 bytes
-    deployed.am_memory_ratio                  # ~8.0
-
-On the 128x128 flagship below this prints a 2048-byte resident AM and
-identical accuracy to the unpacked path. For the batched serving driver
-built on this artifact see ``repro/launch/serve_memhd.py``; for the
-kernel comparison see ``benchmarks/packed_vs_unpacked.py``.
-
-Serving raw features
---------------------
-The deployed artifact answers raw feature requests in ONE dispatch:
-``predict_features`` chains the fused encode kernel (projection MVM +
-sign binarization + bitpack, accumulator in VMEM) straight into the
-XOR+popcount search — the float hypervector never touches HBM, only
-the (B, ceil(D/8)) packed rows pass between the two kernels:
-
-    preds = deployed.predict_features(test_feats)   # fused pipeline
-    # bit-exact with the staged encode -> binarize -> pack -> search
-
-The batched serving driver exposes the same path as
-``python -m repro.launch.serve_memhd --smoke --fused`` (requests of
-ragged feature blocks, greedy batching, latency/QPS JSON), and
-``python -m benchmarks.run --only pipeline`` measures what the fusion
-buys over the four-dispatch staged chain.
-
-Deploying to noisy IMC arrays
+Choosing a deployment backend
 -----------------------------
-The digital kernels are exact; real analog arrays are not. The
-device-fidelity simulator (``repro.imcsim``) deploys the trained model
-onto *simulated hardware* — the AM tiled into 128x128 arrays, per-array
-analog partial sums pushed through a finite-resolution ADC, seeded
-conductance noise / stuck-at faults burned into the resident cells:
+One trained model maps onto every execution substrate through ONE
+call: ``model.deploy(target=..., **backend_opts)`` dispatches through
+the string-keyed backend registry (``repro.deploy``), and every
+artifact it returns implements the same ``DeployedArtifact`` protocol
+(``predict`` / ``predict_features`` / ``score`` / ``resident_bytes`` /
+``imc_cost``), so serving code never branches on the substrate:
 
-    from repro.core import ImcSimConfig
-    ideal = model.deploy(target="imc", sim=ImcSimConfig())
-    ideal.score(x, y)                  # == digital accuracy, bit-exact
+    packed = model.deploy(target="packed")     # 1-bit XOR+popcount
+    floats = model.deploy(target="unpacked")   # float MXU (parity ref)
+    analog = model.deploy(target="imc",        # simulated noisy device
+                          sim=ImcSimConfig(adc_bits=6, noise_sigma=0.5))
 
-    for bits in (8, 6, 4):             # ADC resolution sweep
-        sim = ImcSimConfig(adc_bits=bits, noise_sigma=0.5, seed=7)
-        model.deploy(target="imc", sim=sim).score(x, y)
+* ``"packed"`` (the default) packs the trained binary AM 8 cells/byte
+  into a (ceil(D/8), C) uint8 residence — the paper's Table-I 1-bit
+  accounting made literal, 8x smaller than byte-per-cell storage (32x
+  vs the float32 training copy) — and answers queries with the fused
+  XOR+popcount kernel. It also serves raw features in ONE dispatch:
+  ``predict_features`` chains the fused encode kernel (projection MVM
+  + sign binarization + bitpack, accumulator in VMEM) straight into
+  the packed search, so the float hypervector never touches HBM.
+* ``"unpacked"`` keeps the ±1 float AM and the float ``am_search``
+  kernel. Bit-exact with ``"packed"`` — the parity baseline.
+* ``"imc"`` burns the AM onto a *simulated analog device*
+  (``repro.imcsim``): seeded conductance noise / stuck-at faults in
+  the resident cells, per-array analog partial sums through a
+  finite-resolution ADC. An ideal ``sim`` is bit-exact with the
+  digital backends; a lossy one is what the robustness sweeps measure.
 
-The accuracy the device costs you is recoverable: noise-aware QAIL
+New backends (multi-bit packing, remote arrays) plug in with
+``@repro.deploy.register_backend("name")`` — no model changes.
+
+Serving at scale: any artifact wraps in
+``repro.deploy.ShardedArtifact(dep, devices=N)``, which shards each
+request batch over a data-parallel device mesh (AM replicated, rows
+sharded) bit-exactly. The batched serving driver exposes all of it:
+
+    python -m repro.launch.serve_memhd --smoke --target imc
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m repro.launch.serve_memhd --smoke --fused --devices 8
+
+(greedy request batching, double-buffered dispatch — the host pads
+batch k+1 while batch k is in flight — and a latency/QPS JSON report
+tagged with ``backend`` and ``devices``). The scaling sweep lives in
+``python -m benchmarks.serve_scaling``; the kernel comparisons in
+``benchmarks/packed_vs_unpacked.py`` and ``--only pipeline``.
+
+Recovering accuracy on noisy devices
+------------------------------------
+The accuracy a lossy ``"imc"`` deployment costs is recoverable:
+noise-aware QAIL
 fine-tuning evaluates the training-time similarity MVM against the
 very device instance the model will deploy onto (chip-in-the-loop —
 the quantization-aware idea of §III-C taken down to the hardware), so
@@ -138,10 +137,12 @@ def main():
 
     # 1-bit deployment: pack the AM 8 cells/byte and serve it through
     # the XOR+popcount kernel — same predictions, 8x smaller residence.
-    deployed = model.deploy(packed=True)
+    deployed = model.deploy(target="packed")
     acc_packed = deployed.score(ds.test_x, ds.test_y)
     acc_float = model.score(ds.test_x, ds.test_y)
     assert acc_packed == acc_float
+    assert acc_packed == model.deploy(target="unpacked").score(
+        ds.test_x, ds.test_y)  # every digital backend agrees
     print(f"packed deployment: {deployed.resident_am_bytes} B resident "
           f"AM ({deployed.am_memory_ratio:.0f}x smaller than "
           f"byte-per-cell), acc {acc_packed:.3f} == float {acc_float:.3f}")

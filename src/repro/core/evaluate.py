@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import am as am_lib
+from repro.deploy.padding import pad_rows, pad_vec
 
 Array = jax.Array
 
@@ -50,10 +51,8 @@ def batched_accuracy(predict_fn: Callable[[Array], Array],
         y = labels[b:b + bs]
         k = int(x.shape[0])
         if k < bs:  # pad the ragged tail to the uniform batch shape
-            reps = jnp.broadcast_to(x[-1:], (bs - k,) + tuple(x.shape[1:]))
-            x = jnp.concatenate([x, reps], axis=0)
-            y = jnp.concatenate(
-                [y, jnp.full((bs - k,), -1, y.dtype)])
+            x = pad_rows(x, bs, fill="edge")
+            y = pad_vec(y, bs, value=-1)
         counts.append(_count_correct(predict_fn(x), y))
     total = counts[0]
     for c in counts[1:]:

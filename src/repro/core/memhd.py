@@ -323,44 +323,48 @@ class MemhdModel:
         return eval_lib.batched_accuracy(self.predict, feats, labels, batch)
 
     # -- deployment --------------------------------------------------------------
-    def deploy(self, *, packed: bool = True, mode: str = "popcount",
-               target: str = "digital", sim=None):
+    def deploy(self, *, target: Optional[str] = None,
+               packed: Optional[bool] = None, mode: Optional[str] = None,
+               sim=None, **opts):
         """Freeze the trained model into its serving artifact.
 
-        ``target="digital"`` (default) serves the exact search:
-        ``packed=True`` packs the binary AM 8 cells/byte into the (Dp, C)
-        uint8 residence that the paper's Table I counts (1 bit/cell) and
-        routes ``score``/``predict`` through the fused XOR+popcount
-        kernel; ``packed=False`` keeps the ±1 float AM and the float
-        ``am_search`` kernel (the parity baseline). Predictions are
-        bit-exact between the two.
+        Canonical form: ``deploy(target=t, **backend_opts)`` with ``t``
+        a registered deployment backend (``repro.deploy.registry``):
 
-        ``target="imc"`` deploys onto a *simulated analog device*
-        (``repro.imcsim``): the binary AM is burned in with the
-        stuck-at faults / conductance variation of ``sim``
-        (an ``ImcSimConfig``; seeded, so the same config always yields
-        the same device) and queries go through the tiled
-        analog-partial-sum + ADC kernel. With an ideal ``sim`` this is
-        bit-exact with the digital artifacts; with a lossy one it is
-        what the robustness sweeps measure.
+        * ``"packed"`` (default) — the (Dp, C) uint8 1-bit residence the
+          paper's Table I counts, served by the fused XOR+popcount
+          kernel (``mode="popcount" | "unpack"``).
+        * ``"unpacked"`` — the ±1 float AM and the float ``am_search``
+          kernel; the bit-exact parity baseline.
+        * ``"imc"`` — a *simulated analog device* (``repro.imcsim``):
+          the binary AM is burned in with the stuck-at faults /
+          conductance variation of ``sim`` (an ``ImcSimConfig``; seeded,
+          so the same config always yields the same device) and queries
+          go through the tiled analog-partial-sum + ADC kernel. Ideal
+          ``sim`` == bit-exact with the digital artifacts.
+
+        Every artifact implements the same ``DeployedArtifact``
+        protocol, so serving code is backend-agnostic; wrap any of them
+        in ``repro.deploy.ShardedArtifact`` for multi-device serving.
+
+        Legacy forms keep working: ``deploy(packed=False)`` and
+        ``target="digital"`` map onto the registry targets.
         """
-        if target == "imc":
-            from repro.imcsim import deploy_imc
-            return deploy_imc(self, sim)
-        if target != "digital":
-            raise ValueError(f"unknown deploy target: {target!r}")
+        from repro import deploy as deploy_lib
+        if target in (None, "digital"):
+            if sim is not None:
+                raise ValueError(
+                    "sim= is only meaningful with target='imc'")
+            target = "unpacked" if packed is False else "packed"
+        elif packed is not None:
+            raise ValueError(
+                "packed= is the legacy digital switch; use "
+                "target='packed' / target='unpacked' instead")
+        if mode is not None:
+            opts["mode"] = mode
         if sim is not None:
-            raise ValueError("sim= is only meaningful with target='imc'")
-        binary = self.am_state["binary"]
-        am_packed_t = am_lib.pack_am(binary) if packed else None
-        return DeployedMemhd(
-            enc_params=self.enc_params,
-            am_binary=None if packed else binary,
-            am_packed_t=am_packed_t,
-            centroid_class=self.am_state["centroid_class"],
-            enc_cfg=self.enc_cfg, am_cfg=self.am_cfg,
-            packed=packed, mode=mode,
-        )
+            opts["sim"] = sim
+        return deploy_lib.deploy(self, target, **opts)
 
     # -- deployment accounting -----------------------------------------------------
     @property
@@ -376,108 +380,8 @@ class MemhdModel:
         return _imc_cost(self.enc_cfg, self.am_cfg, arr)
 
 
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass
-class DeployedMemhd:
-    """Frozen serving artifact of a trained MEMHD model.
-
-    The deployment story of the paper (§III-D): the trained binary AM is
-    *resident* in the array and queried one-shot. Here the residence is
-    either the packed (Dp, C) uint8 matrix (``packed=True`` — 1 bit per
-    cell, the Table-I accounting) searched by the XOR+popcount kernel, or
-    the ±1 float32 (C, D) matrix searched by the float MXU kernel
-    (``packed=False``). Both produce identical predictions; the packed
-    artifact is ~8x smaller than even a 1-byte-per-cell unpacked AM (and
-    32x smaller than the float32 training representation).
-
-    Immutable pytree: jits, shards, and checkpoints like the trainer.
-    """
-
-    enc_params: Dict[str, Array]
-    am_binary: Optional[Array]     # (C, D) float32, unpacked deployment
-    am_packed_t: Optional[Array]   # (Dp, C) uint8, packed deployment
-    centroid_class: Array          # (C,) int32
-    enc_cfg: EncoderConfig
-    am_cfg: MemhdConfig
-    packed: bool = True
-    mode: str = "popcount"         # packed kernel: "popcount" | "unpack"
-
-    def tree_flatten(self):
-        children = (self.enc_params, self.am_binary, self.am_packed_t,
-                    self.centroid_class)
-        aux = (self.enc_cfg, self.am_cfg, self.packed, self.mode)
-        return children, aux
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        enc_params, am_binary, am_packed_t, centroid_class = children
-        enc_cfg, am_cfg, packed, mode = aux
-        return cls(enc_params, am_binary, am_packed_t, centroid_class,
-                   enc_cfg, am_cfg, packed, mode)
-
-    # -- inference -------------------------------------------------------------
-    def predict_query(self, q: Array) -> Array:
-        """(B, D) bipolar queries -> (B,) predicted class."""
-        from repro.kernels import ops
-        if self.packed:
-            idx, _ = ops.am_search_packed(
-                ops.pack_rows(q), self.am_packed_t,
-                n_dims=self.am_cfg.dim, mode=self.mode)
-        else:
-            idx, _ = ops.am_search(q, self.am_binary)
-        return self.centroid_class[idx]
-
-    def predict(self, feats: Array) -> Array:
-        q = encoding.encode_query(self.enc_params, self.enc_cfg, feats)
-        return self.predict_query(q)
-
-    @property
-    def fusable(self) -> bool:
-        """True when the single-dispatch fused pipeline applies: packed
-        residence + MVM (projection) encoder + binarized queries."""
-        return (self.packed and self.enc_cfg.kind == "projection"
-                and self.enc_cfg.binarize_query)
-
-    def predict_features(self, feats: Array) -> Array:
-        """(B, f) raw features -> (B,) classes, fused single dispatch.
-
-        The whole pipeline — projection MVM, sign binarization, bitpack,
-        XOR+popcount search, ownership gather — runs as one jitted chain
-        of two Pallas kernels; the float hypervector never touches HBM
-        (only the (B, ceil(D/8)) packed rows pass between them).
-        Bit-exact with the staged ``predict``. Artifacts the fused
-        kernel cannot serve (unpacked residence, id_level encoder,
-        un-binarized queries) fall back to the staged path.
-        """
-        from repro.kernels import ops
-        if not self.fusable:
-            return self.predict(feats)
-        return ops.predict_from_features(
-            feats, self.enc_params["projection"], self.am_packed_t,
-            self.centroid_class, mode=self.mode)
-
-    def score(self, feats: Array, labels: Array, batch: int = 4096,
-              ) -> float:
-        return eval_lib.batched_accuracy(self.predict, feats, labels, batch)
-
-    # -- deployment accounting -------------------------------------------------
-    @property
-    def resident_am_bytes(self) -> int:
-        """Bytes the resident AM actually occupies in HBM."""
-        if self.packed:
-            return int(self.am_packed_t.size)  # uint8
-        return int(self.am_binary.size * self.am_binary.dtype.itemsize)
-
-    @property
-    def am_memory_ratio(self) -> float:
-        """Byte-per-cell residence / this artifact's bytes.
-
-        The smallest addressable unpacked cell is one byte (uint8 {0,1}),
-        so a packed artifact reports ~8x; the float32 AM the unpacked
-        kernel deploys is another 4x on top of that (32x total).
-        """
-        cell_bytes = self.am_cfg.columns * self.am_cfg.dim  # uint8 cells
-        return cell_bytes / self.resident_am_bytes
-
-    def imc_cost(self, arr: ImcArrayConfig | None = None):
-        return _imc_cost(self.enc_cfg, self.am_cfg, arr)
+# Re-export shim: the digital serving artifact moved to the unified
+# deployment subsystem (repro.deploy.digital); existing imports of
+# ``repro.core.memhd.DeployedMemhd`` / ``repro.core.DeployedMemhd``
+# keep working.
+from repro.deploy.digital import DeployedMemhd  # noqa: E402,F401

@@ -1,0 +1,37 @@
+"""Unified deployment-backend subsystem.
+
+One trained ``MemhdModel`` maps onto different execution substrates —
+digital packed-bit search, full-precision search, noisy analog IMC
+arrays (PAPER.md §IV) — through ONE abstraction:
+
+* ``base.DeployedArtifact`` — the protocol every serving artifact
+  implements (``predict_query`` / ``predict`` / ``predict_features`` /
+  ``score`` / ``resident_bytes`` / ``imc_cost``), with the shared
+  plumbing (staged predict, padded-evaluator scoring, pytree
+  registration via ``@pytree_artifact``) written exactly once.
+* ``registry`` — string-keyed backend factories:
+  ``model.deploy(target="packed" | "unpacked" | "imc", **opts)`` is a
+  thin dispatch through ``register_backend``/``get_backend``; new
+  backends (multi-bit packing, remote arrays) plug in without touching
+  the model.
+* ``sharded.ShardedArtifact`` — multi-device data-parallel serving of
+  any backend's query path under ``shard_map`` (AM replicated, batch
+  sharded, ragged tails masked by the padded-evaluator contract).
+* ``padding`` — the one home for tile/batch padding helpers shared by
+  the serving driver, the evaluator, and the Pallas kernel callers.
+
+NOTE: modules in this package import nothing from ``repro.core`` /
+``repro.kernels`` at module scope (the kernel callers import
+``repro.deploy.padding``); built-in backends self-register lazily.
+"""
+from repro.deploy.base import DeployedArtifact, pytree_artifact  # noqa: F401
+from repro.deploy.digital import (  # noqa: F401
+    DeployedMemhd, deploy_packed, deploy_unpacked,
+)
+from repro.deploy.padding import (  # noqa: F401
+    pad_rows, pad_tiles, pad_to_multiple, pad_vec, round_up,
+)
+from repro.deploy.registry import (  # noqa: F401
+    available_backends, deploy, get_backend, register_backend,
+)
+from repro.deploy.sharded import ShardedArtifact, serving_mesh  # noqa: F401

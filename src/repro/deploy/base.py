@@ -1,0 +1,154 @@
+"""``DeployedArtifact``: the one deployment protocol every backend implements.
+
+A deployment backend freezes a trained ``MemhdModel`` into an immutable
+serving artifact — packed digital bits, float parity AM, simulated
+analog device, whatever comes next. Before this module each artifact
+re-implemented the same plumbing (staged predict, ``score`` batching,
+pytree flatten/unflatten, residence accounting); now it is written here
+exactly once and a concrete artifact only supplies:
+
+* its dataclass fields, split into ``_leaf_fields`` (array children)
+  and ``_static_fields`` (hashable configs, the pytree aux),
+* ``predict_query`` — the backend's actual search, and
+* ``resident_bytes`` + ``serving_mode`` — the accounting/reporting hooks.
+
+``@pytree_artifact`` derives the jax pytree registration from those
+field declarations, so artifacts jit, shard, and checkpoint like the
+trainer with zero per-class boilerplate.
+
+NOTE: to stay import-cycle-free (the kernel callers import
+``repro.deploy.padding``), nothing in this package imports
+``repro.core`` / ``repro.kernels`` at module level — heavyweight
+imports live inside the methods, mirroring the kernel-dispatch idiom.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar, Tuple
+
+import jax
+
+Array = jax.Array
+
+
+def pytree_artifact(cls):
+    """Register a ``DeployedArtifact`` dataclass as a jax pytree.
+
+    Children/aux derive from the class's ``_leaf_fields`` /
+    ``_static_fields`` declarations — the per-artifact ``tree_flatten``
+    boilerplate the pre-registry classes each carried is gone.
+    """
+    leaves, static = cls._leaf_fields, cls._static_fields
+    declared = {f.name for f in dataclasses.fields(cls)}
+    missing = (set(leaves) | set(static)) - declared
+    if missing:
+        raise TypeError(f"{cls.__name__} declares non-fields: {missing}")
+    if len(leaves) + len(static) != len(declared):
+        raise TypeError(f"{cls.__name__}: every field must be listed in "
+                        "_leaf_fields or _static_fields")
+
+    def flatten(self):
+        return (tuple(getattr(self, f) for f in leaves),
+                tuple(getattr(self, f) for f in static))
+
+    def unflatten(aux, children):
+        return cls(**dict(zip(leaves, children)),
+                   **dict(zip(static, aux)))
+
+    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
+    return cls
+
+
+class DeployedArtifact:
+    """Shared behaviour of every frozen MEMHD serving artifact.
+
+    The protocol surface (what the serving stack programs against):
+    ``predict_query`` / ``predict`` / ``predict_features`` / ``score`` /
+    ``resident_bytes`` / ``imc_cost`` plus the ``backend`` /
+    ``serving_mode`` report labels.
+    """
+
+    _leaf_fields: ClassVar[Tuple[str, ...]]
+    _static_fields: ClassVar[Tuple[str, ...]]
+
+    # Concrete artifacts carry these as dataclass fields; declared here
+    # for the shared method bodies.
+    enc_params: Any
+    centroid_class: Array
+    enc_cfg: Any
+    am_cfg: Any
+
+    # -- inference -------------------------------------------------------------
+    def predict_query(self, q: Array) -> Array:
+        """(B, D) bipolar queries -> (B,) predicted class."""
+        raise NotImplementedError
+
+    def predict(self, feats: Array) -> Array:
+        """(B, f) raw features -> (B,) classes, staged encode + search."""
+        from repro.core import encoding
+        q = encoding.encode_query(self.enc_params, self.enc_cfg, feats)
+        return self.predict_query(q)
+
+    def predict_features(self, feats: Array) -> Array:
+        """Raw-feature serving entry point.
+
+        Backends with a fused feature->prediction pipeline override
+        this; the default is the staged ``predict``.
+        """
+        return self.predict(feats)
+
+    def score(self, feats: Array, labels: Array, batch: int = 4096,
+              ) -> float:
+        """Accuracy through the shared padded evaluator — every batch
+        the jitted predict sees has ONE shape (no ragged recompiles)."""
+        from repro.core import evaluate as eval_lib
+        return eval_lib.batched_accuracy(self.predict, feats, labels,
+                                         batch)
+
+    def score_queries(self, q: Array, labels: Array, batch: int = 4096,
+                      ) -> float:
+        """Accuracy on pre-encoded queries, same padded evaluator."""
+        from repro.core import evaluate as eval_lib
+        return eval_lib.batched_accuracy(self.predict_query, q, labels,
+                                         batch)
+
+    # -- reporting / accounting ------------------------------------------------
+    @property
+    def backend(self) -> str:
+        """Registry target name this artifact serves under."""
+        raise NotImplementedError
+
+    @property
+    def serving_mode(self) -> str:
+        """Human-readable kernel/readout mode for the serving report."""
+        raise NotImplementedError
+
+    @property
+    def resident_bytes(self) -> int:
+        """Bytes the resident AM actually occupies on the device."""
+        raise NotImplementedError
+
+    # Pre-registry name of ``resident_bytes``; kept for callers/tests.
+    @property
+    def resident_am_bytes(self) -> int:
+        return self.resident_bytes
+
+    @property
+    def am_memory_ratio(self) -> float:
+        """Byte-per-cell residence / this artifact's resident bytes.
+
+        The smallest addressable unpacked cell is one byte (uint8
+        {0,1}): a packed artifact reports ~8x, the float32 AMs 0.25x.
+        """
+        return (self.am_cfg.columns * self.am_cfg.dim) / self.resident_bytes
+
+    def _cost_arr(self):
+        """Array geometry ``imc_cost`` defaults to (backends override)."""
+        from repro.core.imc import ImcArrayConfig
+        return ImcArrayConfig()
+
+    def imc_cost(self, arr=None):
+        """Closed-form IMC mapping of this model's geometry."""
+        from repro.core.imc import memhd_pipeline
+        return memhd_pipeline(self.enc_cfg.features, self.am_cfg.dim,
+                              self.am_cfg.columns, arr or self._cost_arr())

@@ -1,0 +1,129 @@
+"""Digital deployment backends: packed 1-bit and unpacked float search.
+
+``DeployedMemhd`` is the frozen digital serving artifact of a trained
+MEMHD model (§III-D): the trained binary AM is *resident* and queried
+one-shot. Two registry targets share the class:
+
+* ``"packed"`` — the (Dp, C) uint8 residence (1 bit/cell, the Table-I
+  accounting) searched by the fused XOR+popcount kernel; ~8x smaller
+  than byte-per-cell storage and 32x smaller than the float32 training
+  copy. Also the only backend with a fused raw-feature pipeline
+  (``predict_features`` — no float hypervector in HBM).
+* ``"unpacked"`` — the ±1 float32 (C, D) residence searched by the
+  float MXU kernel; the bit-exact parity baseline.
+
+Predictions are identical between the two (and with
+``MemhdModel.predict``). The shared predict/score/pytree plumbing lives
+in ``repro.deploy.base``; this module only supplies the searches and
+the residence accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, Dict, Optional, Tuple
+
+import jax
+
+from repro.deploy.base import DeployedArtifact, pytree_artifact
+from repro.deploy.registry import register_backend
+
+Array = jax.Array
+
+
+@pytree_artifact
+@dataclasses.dataclass
+class DeployedMemhd(DeployedArtifact):
+    """Frozen digital serving artifact (packed or unpacked residence).
+
+    Immutable pytree: jits, shards, and checkpoints like the trainer.
+    """
+
+    enc_params: Dict[str, Array]
+    am_binary: Optional[Array]     # (C, D) float32, unpacked deployment
+    am_packed_t: Optional[Array]   # (Dp, C) uint8, packed deployment
+    centroid_class: Array          # (C,) int32
+    enc_cfg: "EncoderConfig"       # noqa: F821 — aux config
+    am_cfg: "MemhdConfig"          # noqa: F821 — aux config
+    packed: bool = True
+    mode: str = "popcount"         # packed kernel: "popcount" | "unpack"
+
+    _leaf_fields: ClassVar[Tuple[str, ...]] = (
+        "enc_params", "am_binary", "am_packed_t", "centroid_class")
+    _static_fields: ClassVar[Tuple[str, ...]] = (
+        "enc_cfg", "am_cfg", "packed", "mode")
+
+    # -- inference -------------------------------------------------------------
+    def predict_query(self, q: Array) -> Array:
+        """(B, D) bipolar queries -> (B,) predicted class."""
+        from repro.kernels import ops
+        if self.packed:
+            return ops.predict_packed(q, self.am_packed_t,
+                                      self.centroid_class,
+                                      n_dims=self.am_cfg.dim,
+                                      mode=self.mode)
+        return ops.predict_classes(q, self.am_binary, self.centroid_class)
+
+    @property
+    def fusable(self) -> bool:
+        """True when the single-dispatch fused pipeline applies: packed
+        residence + MVM (projection) encoder + binarized queries."""
+        return (self.packed and self.enc_cfg.kind == "projection"
+                and self.enc_cfg.binarize_query)
+
+    def predict_features(self, feats: Array) -> Array:
+        """(B, f) raw features -> (B,) classes, fused single dispatch.
+
+        The whole pipeline — projection MVM, sign binarization, bitpack,
+        XOR+popcount search, ownership gather — runs as one jitted chain
+        of two Pallas kernels; the float hypervector never touches HBM
+        (only the (B, ceil(D/8)) packed rows pass between them).
+        Bit-exact with the staged ``predict``. Artifacts the fused
+        kernel cannot serve (unpacked residence, id_level encoder,
+        un-binarized queries) fall back to the staged path.
+        """
+        from repro.kernels import ops
+        if not self.fusable:
+            return self.predict(feats)
+        return ops.predict_from_features(
+            feats, self.enc_params["projection"], self.am_packed_t,
+            self.centroid_class, mode=self.mode)
+
+    # -- reporting / accounting ------------------------------------------------
+    @property
+    def backend(self) -> str:
+        return "packed" if self.packed else "unpacked"
+
+    @property
+    def serving_mode(self) -> str:
+        return self.mode if self.packed else "float"
+
+    @property
+    def resident_bytes(self) -> int:
+        if self.packed:
+            return int(self.am_packed_t.size)  # uint8
+        return int(self.am_binary.size * self.am_binary.dtype.itemsize)
+
+
+def _freeze(model, *, packed: bool, mode: str) -> DeployedMemhd:
+    from repro.core import am as am_lib
+    binary = model.am_state["binary"]
+    return DeployedMemhd(
+        enc_params=model.enc_params,
+        am_binary=None if packed else binary,
+        am_packed_t=am_lib.pack_am(binary) if packed else None,
+        centroid_class=model.am_state["centroid_class"],
+        enc_cfg=model.enc_cfg, am_cfg=model.am_cfg,
+        packed=packed, mode=mode,
+    )
+
+
+@register_backend("packed")
+def deploy_packed(model, *, mode: str = "popcount") -> DeployedMemhd:
+    """Pack the binary AM 8 cells/byte; serve via XOR+popcount."""
+    return _freeze(model, packed=True, mode=mode)
+
+
+@register_backend("unpacked")
+def deploy_unpacked(model, *, mode: str = "popcount") -> DeployedMemhd:
+    """Keep the ±1 float AM; serve via the float MXU search kernel."""
+    return _freeze(model, packed=False, mode=mode)

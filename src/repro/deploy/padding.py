@@ -1,0 +1,97 @@
+"""Shared tile/batch padding utilities for the deployment subsystem.
+
+One home for every "round up to a tile multiple and pad" computation in
+the repo. Before this module the same arithmetic was copy-pasted across
+the serving driver (``launch/serve_memhd.py``), the padded evaluator
+(``core/evaluate.py``) and every Pallas kernel caller
+(``-(-n // tile) * tile`` inline, eight times over); now they all call
+here.
+
+The row helpers are array-namespace agnostic: numpy in, numpy out (the
+serving driver pads on the host, off the device queue) and jax in, jax
+out (the evaluator and the kernels pad traced values).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def round_up(n: int, tile: int) -> int:
+    """Smallest multiple of ``tile`` that is >= ``n``."""
+    if tile <= 0:
+        raise ValueError(f"tile must be positive, got {tile}")
+    return -(-n // tile) * tile
+
+
+def _xp(x):
+    """numpy for host arrays, jax.numpy for everything else."""
+    if isinstance(x, np.ndarray):
+        return np
+    import jax.numpy as jnp
+    return jnp
+
+
+def pad_rows(x, n_rows: int, *, fill: str = "zero"):
+    """Pad axis 0 of ``x`` up to ``n_rows`` rows.
+
+    fill="zero" appends zero rows (a valid encoder input whose
+    prediction the caller discards); fill="edge" repeats the last row
+    (the padded-evaluator contract — padded labels are -1, so repeated
+    rows can never count as correct).
+    """
+    pad = n_rows - x.shape[0]
+    if pad < 0:
+        raise ValueError(f"cannot pad {x.shape[0]} rows down to {n_rows}")
+    if pad == 0:
+        return x
+    xp = _xp(x)
+    if fill == "zero":
+        filler = xp.zeros((pad,) + tuple(x.shape[1:]), x.dtype)
+    elif fill == "edge":
+        filler = xp.broadcast_to(x[-1:], (pad,) + tuple(x.shape[1:]))
+    else:
+        raise ValueError(f"bad fill: {fill!r}")
+    return xp.concatenate([x, filler], axis=0)
+
+
+def pad_to_multiple(x, tile: int) -> Tuple[np.ndarray, int]:
+    """Zero-pad rows up to the next multiple of ``tile``.
+
+    Returns (padded, n_valid). Zero feature rows encode to the all-ones
+    query (sign(0) -> +1) — a valid input whose prediction is discarded.
+    """
+    n = int(x.shape[0])
+    return pad_rows(x, round_up(max(n, 1), tile)), n
+
+
+def pad_tiles(x, row_tile: int, col_tile: int | None = None, *,
+              value=0):
+    """Constant-pad a rank-2 array so each axis is a tile multiple.
+
+    The kernel-caller idiom: operands are padded up to the Pallas block
+    shape so the grid divides evenly; padded rows/columns default to
+    zeros, which every kernel in the repo either ignores by
+    construction (zero-padded reduction dims) or masks (padded winner
+    columns). Kernels with a non-neutral pad (e.g. the bitpacker's
+    -1 tail bits) pass ``value``.
+    """
+    import jax.numpy as jnp
+    r, c = x.shape
+    pr = round_up(r, row_tile) - r
+    pc = (round_up(c, col_tile) - c) if col_tile else 0
+    if pr or pc:
+        x = jnp.pad(x, ((0, pr), (0, pc)), constant_values=value)
+    return x
+
+
+def pad_vec(x, n: int, *, value=0):
+    """Pad a rank-1 array up to ``n`` entries with a constant."""
+    import jax.numpy as jnp
+    pad = n - x.shape[0]
+    if pad < 0:
+        raise ValueError(f"cannot pad {x.shape[0]} down to {n}")
+    if pad == 0:
+        return x
+    return jnp.pad(x, (0, pad), constant_values=value)

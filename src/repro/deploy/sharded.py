@@ -1,0 +1,125 @@
+"""Multi-device sharded serving on top of any deployment backend.
+
+``ShardedArtifact`` wraps a ``DeployedArtifact`` (any registry backend —
+the wrapper only uses the protocol surface) and serves its query path
+under ``shard_map`` over a 1-D data-parallel mesh: the artifact is
+replicated (the AM is the model, and it is tiny by construction — the
+paper's whole thesis), the batch axis shards over the devices, and each
+shard runs the backend's own kernels on its rows. Predictions are
+row-local, so sharded serving is bit-exact with the single-device path.
+
+Ragged batches ride the existing padded-evaluator contract: the batch is
+zero-padded up to a device multiple (zero feature rows encode to the
+valid all-ones query) and the tail predictions are dropped before the
+caller sees them.
+
+    dep = model.deploy(target="packed")
+    sharded = ShardedArtifact(dep, devices=8)   # or mesh=...
+    preds = sharded.predict(feats)              # == dep.predict(feats)
+
+``launch/serve_memhd.py --devices N`` and ``benchmarks/serve_scaling``
+build on exactly this wrapper.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map as _shard_map
+from repro.deploy.padding import pad_rows, round_up
+
+Array = jax.Array
+
+DATA_AXIS = "data"
+
+
+def serving_mesh(devices: Optional[Sequence] = None,
+                 n: Optional[int] = None) -> Mesh:
+    """A 1-D data-parallel mesh over the first ``n`` local devices."""
+    devs = list(jax.devices()) if devices is None else list(devices)
+    if n is not None:
+        if n < 1 or n > len(devs):
+            raise ValueError(
+                f"requested {n} devices, have {len(devs)} "
+                f"({[d.platform for d in devs[:4]]}...)")
+        devs = devs[:n]
+    return Mesh(np.array(devs), (DATA_AXIS,))
+
+
+class ShardedArtifact:
+    """Data-parallel serving wrapper around any deployment artifact.
+
+    Query methods (``predict`` / ``predict_features`` /
+    ``predict_query``) run under ``shard_map``; everything else —
+    ``backend``, ``serving_mode``, residence accounting, configs —
+    delegates to the wrapped artifact, so the wrapper drops into any
+    code programmed against the ``DeployedArtifact`` protocol (the
+    serving driver, ``build_report``, the benchmarks).
+    """
+
+    def __init__(self, artifact, mesh: Optional[Mesh] = None,
+                 devices: Optional[int] = None):
+        if isinstance(artifact, ShardedArtifact):
+            raise TypeError("artifact is already sharded")
+        self.artifact = artifact
+        self.mesh = mesh if mesh is not None else serving_mesh(n=devices)
+        if len(self.mesh.axis_names) != 1:
+            raise ValueError("serving mesh must be 1-D (data-parallel)")
+        self.n_devices = int(self.mesh.devices.size)
+        self._fns: Dict[str, callable] = {}
+
+    def __getattr__(self, name):
+        # Only reached for names not set on the wrapper itself.
+        return getattr(self.artifact, name)
+
+    # -- sharded dispatch ------------------------------------------------------
+    def _sharded_fn(self, method: str):
+        fn = self._fns.get(method)
+        if fn is None:
+            axis = self.mesh.axis_names[0]
+
+            def local(art, x):
+                return getattr(art, method)(x)
+
+            # check_rep=False: the per-shard body calls Pallas kernels,
+            # which have no shard_map replication rule.
+            fn = jax.jit(_shard_map(
+                local, mesh=self.mesh,
+                in_specs=(P(), P(axis)), out_specs=P(axis),
+                check_rep=False))
+            self._fns[method] = fn
+        return fn
+
+    def _call(self, method: str, feats) -> Array:
+        if not hasattr(feats, "shape"):
+            feats = np.asarray(feats, np.float32)
+        n = int(feats.shape[0])
+        m = round_up(max(n, 1), self.n_devices)
+        # pad_rows is namespace-agnostic: numpy batches pad on the host
+        # (off the device queue), device-resident batches stay on device
+        # with async dispatch — no forced device->host round-trip.
+        out = self._sharded_fn(method)(self.artifact, pad_rows(feats, m))
+        return out[:n]
+
+    # -- protocol surface ------------------------------------------------------
+    def predict(self, feats) -> Array:
+        return self._call("predict", feats)
+
+    def predict_features(self, feats) -> Array:
+        return self._call("predict_features", feats)
+
+    def predict_query(self, q) -> Array:
+        return self._call("predict_query", q)
+
+    def score(self, feats, labels, batch: int = 4096) -> float:
+        from repro.core import evaluate as eval_lib
+        return eval_lib.batched_accuracy(self.predict, feats, labels,
+                                         batch)
+
+    @property
+    def row_multiple(self) -> int:
+        """Rows per batch must divide into this many equal shards."""
+        return self.n_devices

@@ -14,25 +14,31 @@ predictions are bit-exact with the digital model — the fidelity-parity
 contract proven in tests/test_imcsim.py. With a realistic sim it is the
 thing the robustness sweeps (``imcsim.evaluate``) and the noise-aware
 trainer (``imcsim.noise_aware``) measure against.
+
+``ImcDeployedMemhd`` implements the shared ``DeployedArtifact``
+protocol (``repro.deploy.base``) and registers as the ``"imc"``
+deployment backend — the staged predict, padded-evaluator ``score``,
+and pytree registration all come from the base class.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import ClassVar, Dict, Optional, Tuple
 
 import jax
 
-from repro.core import encoding, evaluate as eval_lib
 from repro.core import imc as imc_lib
 from repro.core.types import EncoderConfig, ImcSimConfig, MemhdConfig
+from repro.deploy.base import DeployedArtifact, pytree_artifact
+from repro.deploy.registry import register_backend
 from repro.imcsim import device as device_lib
 
 Array = jax.Array
 
 
-@jax.tree_util.register_pytree_node_class
+@pytree_artifact
 @dataclasses.dataclass
-class ImcDeployedMemhd:
+class ImcDeployedMemhd(DeployedArtifact):
     """Frozen MEMHD model resident on a simulated analog device.
 
     Immutable pytree (like ``DeployedMemhd``): the analog AM, the
@@ -50,37 +56,35 @@ class ImcDeployedMemhd:
     am_cfg: MemhdConfig
     sim: ImcSimConfig
 
-    def tree_flatten(self):
-        children = (self.enc_params, self.am_analog, self.tile_offsets,
-                    self.centroid_class)
-        aux = (self.enc_cfg, self.am_cfg, self.sim)
-        return children, aux
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        enc_params, am_analog, tile_offsets, centroid_class = children
-        enc_cfg, am_cfg, sim = aux
-        return cls(enc_params, am_analog, tile_offsets, centroid_class,
-                   enc_cfg, am_cfg, sim)
+    _leaf_fields: ClassVar[Tuple[str, ...]] = (
+        "enc_params", "am_analog", "tile_offsets", "centroid_class")
+    _static_fields: ClassVar[Tuple[str, ...]] = (
+        "enc_cfg", "am_cfg", "sim")
 
     # -- inference -------------------------------------------------------------
     def predict_query(self, q: Array) -> Array:
         """(B, D) bipolar queries -> (B,) predicted class, via the
         simulated analog readout."""
         from repro.kernels import ops
-        idx, _ = ops.am_search_imc(q, self.am_analog, sim=self.sim,
-                                   offsets=self.tile_offsets)
-        return self.centroid_class[idx]
+        return ops.predict_imc(q, self.am_analog, self.centroid_class,
+                               sim=self.sim, offsets=self.tile_offsets)
 
-    def predict(self, feats: Array) -> Array:
-        q = encoding.encode_query(self.enc_params, self.enc_cfg, feats)
-        return self.predict_query(q)
+    # -- reporting / accounting ------------------------------------------------
+    @property
+    def backend(self) -> str:
+        return "imc"
 
-    def score(self, feats: Array, labels: Array, batch: int = 4096,
-              ) -> float:
-        return eval_lib.batched_accuracy(self.predict, feats, labels, batch)
+    @property
+    def serving_mode(self) -> str:
+        return "analog"
 
-    # -- deployment accounting -------------------------------------------------
+    @property
+    def resident_bytes(self) -> int:
+        n = self.am_analog.size * self.am_analog.dtype.itemsize
+        if self.tile_offsets is not None:
+            n += self.tile_offsets.size * self.tile_offsets.dtype.itemsize
+        return int(n)
+
     @property
     def cycles(self) -> int:
         """Array passes per query — the kernel grid, which equals
@@ -89,12 +93,11 @@ class ImcDeployedMemhd:
         return imc_cycles_for((self.am_cfg.dim, self.am_cfg.columns),
                               self.sim.arr.rows, self.sim.arr.cols)
 
-    def imc_cost(self, arr=None):
-        return imc_lib.memhd_pipeline(
-            self.enc_cfg.features, self.am_cfg.dim, self.am_cfg.columns,
-            arr or self.sim.arr)
+    def _cost_arr(self):
+        return self.sim.arr
 
 
+@register_backend("imc")
 def deploy_imc(model, sim: Optional[ImcSimConfig] = None,
                ) -> ImcDeployedMemhd:
     """Burn ``model``'s binary AM onto a simulated device instance."""

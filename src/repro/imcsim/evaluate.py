@@ -15,7 +15,6 @@ from typing import Dict, List, Optional, Sequence
 
 import jax
 
-from repro.core import evaluate as eval_lib
 from repro.core.types import ImcSimConfig
 
 Array = jax.Array
@@ -37,8 +36,7 @@ def _queries_of(model, feats: Array, queries: Optional[Array]) -> Array:
 def _score_queries(model, q: Array, labels: Array, sim: ImcSimConfig,
                    batch: int = 4096) -> float:
     from repro.imcsim.deploy import deploy_imc
-    dep = deploy_imc(model, sim)
-    return eval_lib.batched_accuracy(dep.predict_query, q, labels, batch)
+    return deploy_imc(model, sim).score_queries(q, labels, batch)
 
 
 def imc_accuracy(model, feats: Array, labels: Array,

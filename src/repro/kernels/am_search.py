@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.deploy.padding import pad_tiles
+
 Array = jax.Array
 
 TILE = 128
@@ -104,14 +106,11 @@ def am_search(q: Array, am_t: Array, *, block_b: int = 256,
     assert dd == dd2, (q.shape, am_t.shape)
 
     bb = min(block_b, max(b, 1))
-    pb = -b % bb
-    pd = -dd % TILE
-    pc = -c % TILE
-    qp = jnp.pad(q.astype(jnp.float32), ((0, pb), (0, pd)))
-    ap = jnp.pad(am_t.astype(jnp.float32), ((0, pd), (0, pc)))
-    gb = (b + pb) // bb
-    gc = (c + pc) // TILE
-    gd = (dd + pd) // TILE
+    qp = pad_tiles(q.astype(jnp.float32), bb, TILE)
+    ap = pad_tiles(am_t.astype(jnp.float32), TILE, TILE)
+    gb = qp.shape[0] // bb
+    gc = ap.shape[1] // TILE
+    gd = qp.shape[1] // TILE
 
     idx, sim = pl.pallas_call(
         _make_kernel(c),
@@ -125,8 +124,8 @@ def am_search(q: Array, am_t: Array, *, block_b: int = 256,
             pl.BlockSpec((bb, 1), lambda i, cc, d: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((b + pb, 1), jnp.int32),
-            jax.ShapeDtypeStruct((b + pb, 1), jnp.float32),
+            jax.ShapeDtypeStruct((qp.shape[0], 1), jnp.int32),
+            jax.ShapeDtypeStruct((qp.shape[0], 1), jnp.float32),
         ],
         scratch_shapes=[
             pltpu.VMEM((bb, TILE), jnp.float32),

@@ -50,6 +50,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.deploy.padding import pad_tiles
+
 Array = jax.Array
 
 
@@ -144,14 +146,11 @@ def am_search_imc(q: Array, am_t: Array, offsets: Array | None = None, *,
     assert dd == dd2, (q.shape, am_t.shape)
 
     bb = min(block_b, max(b, 1))
-    pb = -b % bb
-    pd = -dd % tile_rows
-    pc = -c % tile_cols
-    qp = jnp.pad(q.astype(jnp.float32), ((0, pb), (0, pd)))
-    ap = jnp.pad(am_t.astype(jnp.float32), ((0, pd), (0, pc)))
-    gb = (b + pb) // bb
-    gc = (c + pc) // tile_cols
-    gd = (dd + pd) // tile_rows
+    qp = pad_tiles(q.astype(jnp.float32), bb, tile_rows)
+    ap = pad_tiles(am_t.astype(jnp.float32), tile_rows, tile_cols)
+    gb = qp.shape[0] // bb
+    gc = ap.shape[1] // tile_cols
+    gd = qp.shape[1] // tile_rows
     if offsets is None:
         offsets = jnp.zeros((gd, gc), jnp.float32)
     if offsets.shape != (gd, gc):
@@ -171,8 +170,8 @@ def am_search_imc(q: Array, am_t: Array, offsets: Array | None = None, *,
             pl.BlockSpec((bb, 1), lambda i, cc, d: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((b + pb, 1), jnp.int32),
-            jax.ShapeDtypeStruct((b + pb, 1), jnp.float32),
+            jax.ShapeDtypeStruct((qp.shape[0], 1), jnp.int32),
+            jax.ShapeDtypeStruct((qp.shape[0], 1), jnp.float32),
         ],
         scratch_shapes=[
             pltpu.VMEM((bb, tile_cols), jnp.float32),

@@ -45,6 +45,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.deploy.padding import pad_tiles
+
 from repro.kernels.pack_bits import pack_bits
 
 Array = jax.Array
@@ -149,11 +151,7 @@ def pack_rows(x: Array) -> Array:
     with -1 (bit 0) so tail bits XOR-cancel against the identically padded
     AM. Shares its bit layout with ``pack_bits`` / ``ref.pack_bits``.
     """
-    d = x.shape[-1]
-    pad = -d % 8
-    if pad:
-        x = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, pad)),
-                    constant_values=-1.0)
+    x = pad_tiles(x.astype(jnp.float32), 1, 8, value=-1.0)
     return pack_bits(x)
 
 
@@ -196,15 +194,12 @@ def am_search_packed(q_packed: Array, am_packed_t: Array, *,
         raise ValueError(f"n_dims={n_dims} inconsistent with Dp={dp}")
 
     bb = min(block_b, max(b, 1))
-    pb = -b % bb
-    pdp = -dp % TILE_P
-    pc = -c % TILE
     # Zero pad bytes: padded dims XOR to 0 in both operands.
-    qp = jnp.pad(q_packed, ((0, pb), (0, pdp)))
-    ap = jnp.pad(am_packed_t, ((0, pdp), (0, pc)))
-    gb = (b + pb) // bb
-    gc = (c + pc) // TILE
-    gd = (dp + pdp) // TILE_P
+    qp = pad_tiles(q_packed, bb, TILE_P)
+    ap = pad_tiles(am_packed_t, TILE_P, TILE)
+    gb = qp.shape[0] // bb
+    gc = ap.shape[1] // TILE
+    gd = qp.shape[1] // TILE_P
 
     idx, sim = pl.pallas_call(
         _make_kernel(n_cols, n_dims, mode),
@@ -218,8 +213,8 @@ def am_search_packed(q_packed: Array, am_packed_t: Array, *,
             pl.BlockSpec((bb, 1), lambda i, cc, d: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((b + pb, 1), jnp.int32),
-            jax.ShapeDtypeStruct((b + pb, 1), jnp.float32),
+            jax.ShapeDtypeStruct((qp.shape[0], 1), jnp.int32),
+            jax.ShapeDtypeStruct((qp.shape[0], 1), jnp.float32),
         ],
         scratch_shapes=[
             pltpu.VMEM((bb, TILE), jnp.float32),

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.deploy.padding import pad_tiles
+
 Array = jax.Array
 
 TILE = 128  # IMC array dim == MXU tile dim
@@ -62,12 +64,10 @@ def binary_mvm(x: Array, w: Array, *, block_b: int = 128,
     assert k == k2, (x.shape, w.shape)
 
     bb = min(block_b, max(b, 1))
-    pb = -b % bb
-    pk = -k % TILE
-    pn = -n % TILE
-    xp = jnp.pad(x.astype(jnp.float32), ((0, pb), (0, pk)))
-    wp = jnp.pad(w.astype(jnp.float32), ((0, pk), (0, pn)))
-    gb, gk, gn = (b + pb) // bb, (k + pk) // TILE, (n + pn) // TILE
+    xp = pad_tiles(x.astype(jnp.float32), bb, TILE)
+    wp = pad_tiles(w.astype(jnp.float32), TILE, TILE)
+    gb, gk, gn = (xp.shape[0] // bb, xp.shape[1] // TILE,
+                  wp.shape[1] // TILE)
 
     out = pl.pallas_call(
         _mvm_kernel,
@@ -77,7 +77,8 @@ def binary_mvm(x: Array, w: Array, *, block_b: int = 128,
             pl.BlockSpec((TILE, TILE), lambda i, j, kk: (kk, j)),
         ],
         out_specs=pl.BlockSpec((bb, TILE), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((b + pb, n + pn), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]),
+                                       jnp.float32),
         interpret=interpret,
     )(xp, wp)
     return out[:b, :n]

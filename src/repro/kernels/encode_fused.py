@@ -44,6 +44,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.deploy.padding import pad_tiles
+
 from repro.kernels.am_search_packed import am_search_packed
 
 Array = jax.Array
@@ -108,12 +110,10 @@ def encode_pack(feats: Array, projection: Array, *, block_b: int = 128,
     assert f == f2, (feats.shape, projection.shape)
 
     bb = min(block_b, max(b, 1))
-    pb = -b % bb
-    pf = -f % TILE
-    pd = -d % TILE
-    xp = jnp.pad(feats.astype(jnp.float32), ((0, pb), (0, pf)))
-    wp = jnp.pad(projection.astype(jnp.float32), ((0, pf), (0, pd)))
-    gb, gf, gd = (b + pb) // bb, (f + pf) // TILE, (d + pd) // TILE
+    xp = pad_tiles(feats.astype(jnp.float32), bb, TILE)
+    wp = pad_tiles(projection.astype(jnp.float32), TILE, TILE)
+    gb, gf, gd = (xp.shape[0] // bb, xp.shape[1] // TILE,
+                  wp.shape[1] // TILE)
 
     out = pl.pallas_call(
         _make_kernel(d),
@@ -123,7 +123,8 @@ def encode_pack(feats: Array, projection: Array, *, block_b: int = 128,
             pl.BlockSpec((TILE, TILE), lambda i, j, k: (k, j)),
         ],
         out_specs=pl.BlockSpec((bb, TILE_P), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((b + pb, gd * TILE_P), jnp.uint8),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], gd * TILE_P),
+                                       jnp.uint8),
         scratch_shapes=[pltpu.VMEM((bb, TILE), jnp.float32)],
         interpret=interpret,
     )(xp, wp)

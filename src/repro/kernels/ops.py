@@ -37,6 +37,7 @@ __all__ = [
     "encode_mvm", "encode_pack", "am_search", "am_search_imc",
     "am_search_packed", "search_from_features", "predict_from_features",
     "pack_bits", "unpack_bits", "pack_rows", "qail_update",
+    "predict_classes", "predict_packed", "predict_imc",
     "search_cycles", "imc_search_cycles", "packed_search_cycles",
     "mvm_cycles", "encode_pack_cycles", "ref",
 ]
@@ -192,4 +193,26 @@ def predict_classes(queries: Array, am: Array, centroid_class: Array,
                     *, use_kernel: bool = True) -> Array:
     """End-to-end §III-D prediction: search + ownership lookup."""
     idx, _ = am_search(queries, am, use_kernel=use_kernel)
+    return centroid_class[idx]
+
+
+def predict_packed(queries: Array, am_packed_t: Array,
+                   centroid_class: Array, *, n_dims: int,
+                   mode: str = "popcount", use_kernel: bool = True,
+                   ) -> Array:
+    """§III-D prediction over the packed residence: pack the bipolar
+    queries, fused XOR+popcount search, ownership lookup."""
+    qp = pack_rows(queries, use_kernel=use_kernel)
+    idx, _ = am_search_packed(qp, am_packed_t, n_dims=n_dims, mode=mode,
+                              use_kernel=use_kernel)
+    return centroid_class[idx]
+
+
+def predict_imc(queries: Array, am: Array, centroid_class: Array, *,
+                sim, offsets: Array = None, use_kernel: bool = True,
+                ) -> Array:
+    """§III-D prediction through the simulated analog readout:
+    tiled analog search + ADC + ownership lookup."""
+    idx, _ = am_search_imc(queries, am, sim=sim, offsets=offsets,
+                           use_kernel=use_kernel)
     return centroid_class[idx]

@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.deploy.padding import pad_tiles
+
 Array = jax.Array
 
 LANES = 1024  # unpacked cells per block column; packed cols = LANES // 8
@@ -47,18 +49,16 @@ def pack_bits(x: Array, *, block_r: int = 256,
     if c % 8:
         raise ValueError(f"C={c} must be a multiple of 8")
     br = min(block_r, max(r, 1))
-    pr = -r % br
-    pc = -c % LANES
-    xp = jnp.pad(x.astype(jnp.float32), ((0, pr), (0, pc)),
-                 constant_values=-1.0)
-    gr, gc = (r + pr) // br, (c + pc) // LANES
+    xp = pad_tiles(x.astype(jnp.float32), br, LANES, value=-1.0)
+    gr, gc = xp.shape[0] // br, xp.shape[1] // LANES
 
     out = pl.pallas_call(
         _pack_kernel,
         grid=(gr, gc),
         in_specs=[pl.BlockSpec((br, LANES), lambda i, j: (i, j))],
         out_specs=pl.BlockSpec((br, LANES // 8), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((r + pr, (c + pc) // 8), jnp.uint8),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], xp.shape[1] // 8),
+                                       jnp.uint8),
         interpret=interpret,
     )(xp)
     return out[:r, : c // 8]
@@ -72,17 +72,15 @@ def unpack_bits(packed: Array, *, block_r: int = 256,
         interpret = jax.default_backend() != "tpu"
     r, cb = packed.shape
     br = min(block_r, max(r, 1))
-    pr = -r % br
-    pcb = -cb % (LANES // 8)
-    pp = jnp.pad(packed, ((0, pr), (0, pcb)))
-    gr, gc = (r + pr) // br, (cb + pcb) // (LANES // 8)
+    pp = pad_tiles(packed, br, LANES // 8)
+    gr, gc = pp.shape[0] // br, pp.shape[1] // (LANES // 8)
 
     out = pl.pallas_call(
         _unpack_kernel,
         grid=(gr, gc),
         in_specs=[pl.BlockSpec((br, LANES // 8), lambda i, j: (i, j))],
         out_specs=pl.BlockSpec((br, LANES), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((r + pr, (cb + pcb) * 8),
+        out_shape=jax.ShapeDtypeStruct((pp.shape[0], pp.shape[1] * 8),
                                        jnp.float32),
         interpret=interpret,
     )(pp)

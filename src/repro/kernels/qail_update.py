@@ -32,6 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.deploy.padding import pad_tiles, pad_vec
+
 Array = jax.Array
 
 TILE = 128
@@ -116,18 +118,16 @@ def qail_update(q: Array, upd: Array, am_t: Array, centroid_class: Array,
     assert upd.shape == q.shape, (upd.shape, q.shape)
 
     bb = min(block_b, max(b, 1))
-    pb = -b % bb
-    pd = -dd % TILE
-    pc = -c % TILE
-    qp = jnp.pad(q.astype(jnp.float32), ((0, pb), (0, pd)))
-    up = jnp.pad(upd.astype(jnp.float32), ((0, pb), (0, pd)))
-    ap = jnp.pad(am_t.astype(jnp.float32), ((0, pd), (0, pc)))
-    ownp = jnp.pad(centroid_class.astype(jnp.int32), (0, pc),
-                   constant_values=-1)[None, :]
-    yp = jnp.pad(labels.astype(jnp.int32), (0, pb),
-                 constant_values=-1)[:, None]
-    mp = jnp.pad(mask.astype(jnp.float32), (0, pb))[:, None]
-    gb = (b + pb) // bb
+    qp = pad_tiles(q.astype(jnp.float32), bb, TILE)
+    up = pad_tiles(upd.astype(jnp.float32), bb, TILE)
+    ap = pad_tiles(am_t.astype(jnp.float32), TILE, TILE)
+    pb, pd = qp.shape[0] - b, qp.shape[1] - dd
+    pc = ap.shape[1] - c
+    ownp = pad_vec(centroid_class.astype(jnp.int32), c + pc,
+                   value=-1)[None, :]
+    yp = pad_vec(labels.astype(jnp.int32), b + pb, value=-1)[:, None]
+    mp = pad_vec(mask.astype(jnp.float32), b + pb)[:, None]
+    gb = qp.shape[0] // bb
 
     delta, miss = pl.pallas_call(
         _make_kernel(c, lr),

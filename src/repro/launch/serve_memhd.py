@@ -2,25 +2,33 @@
 
 ``launch/serve.py`` serves LM decode; this driver serves the paper's
 actual deployment scenario — a stream of classification requests of raw
-feature rows against the resident 1-bit AM. Requests of ragged sizes
-are greedily packed into batches (a request never splits), each batch
-is zero-padded up to the next tile multiple so every launch hits the
-same compiled kernel shapes, and the whole batch goes through
-encode -> pack -> fused XOR+popcount associative search.
+feature rows against the resident AM of ANY registered deployment
+backend (``--target packed | unpacked | imc``). Requests of ragged
+sizes are greedily packed into batches (a request never splits), each
+batch is zero-padded up to the next tile multiple so every launch hits
+the same compiled kernel shapes, and batches are served through a
+double-buffered pipeline: the host prepares/pads batch k+1 while batch
+k is in flight on the device (``--depth`` controls how many batches may
+be in flight; 1 recovers the fully synchronous loop).
 
-``--fused`` serves each batch through ``predict_features`` — the
-single-dispatch chain of the fused encode/sign/bitpack kernel into the
-packed search (no float hypervector in HBM); the default serves the
-staged encode -> binarize -> pack -> search path. Predictions are
-bit-exact between the two modes.
+``--devices N`` shards every batch over a data-parallel mesh of the
+first N local devices (``repro.deploy.ShardedArtifact``: AM replicated,
+batch rows sharded) — bit-exact with single-device serving. ``--fused``
+serves each batch through ``predict_features`` — the single-dispatch
+chain of the fused encode/sign/bitpack kernel into the packed search
+(no float hypervector in HBM); the default serves the staged
+encode -> binarize -> pack -> search path. Predictions are bit-exact
+between the two modes.
 
 The report mirrors serve.py's JSON contract: wall time, per-batch
-latency percentiles, queries/s, plus the packed-residence accounting
-(resident AM bytes and the ~8x ratio vs byte-per-cell storage).
+latency percentiles, queries/s, per-device throughput, plus the
+backend label and residence accounting of the served artifact.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve_memhd --smoke --fused \
       --requests 64 --max-batch 256
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m repro.launch.serve_memhd --smoke --devices 8
 """
 from __future__ import annotations
 
@@ -28,11 +36,16 @@ import argparse
 import dataclasses
 import json
 import logging
+import math
 import time
+from collections import deque
 from typing import Dict, List, Sequence, Tuple
 
 import jax
 import numpy as np
+
+# Shared tile-padding helpers (re-exported here for existing callers).
+from repro.deploy.padding import pad_to_multiple, round_up  # noqa: F401
 
 log = logging.getLogger("serve_memhd")
 
@@ -73,22 +86,10 @@ def make_batches(requests: Sequence[Request], max_batch: int,
     return batches
 
 
-def pad_to_multiple(x: np.ndarray, tile: int) -> Tuple[np.ndarray, int]:
-    """Zero-pad rows up to the next multiple of ``tile``.
-
-    Returns (padded, n_valid). Zero feature rows encode to the all-ones
-    query (sign(0) -> +1) — a valid input whose prediction is discarded.
-    """
-    n = x.shape[0]
-    pad = -n % tile
-    if pad:
-        x = np.concatenate([x, np.zeros((pad,) + x.shape[1:], x.dtype)])
-    return x, n
-
-
 def serve_batches(deployed, requests: Sequence[Request],
                   max_batch: int = 256, tile: int = TILE_B,
                   warmup: bool = True, fused: bool = False,
+                  depth: int = 1,
                   ) -> Tuple[Dict[int, np.ndarray], Dict]:
     """Run the request stream through the deployed model.
 
@@ -99,36 +100,60 @@ def serve_batches(deployed, requests: Sequence[Request],
     fused pipeline) instead of the staged ``predict``; predictions are
     bit-exact between the two.
 
+    ``depth`` is the double-buffer depth: up to ``depth`` batches may be
+    in flight on the device while the host concatenates and pads the
+    next one (jax dispatch is async; the host only blocks when the
+    pipeline is full). The default ``depth=1`` is the synchronous loop,
+    and its ``lat_ms_*`` stats are pure per-batch service latency —
+    comparable across releases. With ``depth > 1`` latency is measured
+    dispatch -> result ready and so INCLUDES pipeline queue wait; the
+    ``depth`` stat field tags every report with which semantics apply.
+
     Returns (responses, stats): responses maps rid -> (n,) predicted
     classes; stats holds per-batch latencies and padding accounting.
     """
+    if depth < 1:
+        raise ValueError(f"depth must be >= 1, got {depth}")
+    # Sharded artifacts need every batch to split evenly across devices.
+    tile = math.lcm(tile, getattr(deployed, "row_multiple", 1))
     predict = (deployed.predict_features if fused else deployed.predict)
     batches = make_batches(requests, max_batch)
     if warmup:
         n_feats = requests[0].feats.shape[1] if requests else 0
-        shapes = {-(-sum(r.size for r in b) // tile) * tile
-                  for b in batches}
+        shapes = {round_up(sum(r.size for r in b), tile) for b in batches}
         for rows in sorted(shapes):
             jax.block_until_ready(predict(
                 np.zeros((rows, n_feats), np.float32)))
     responses: Dict[int, np.ndarray] = {}
     lat_ms: List[float] = []
     rows_real = rows_padded = 0
+    inflight: deque = deque()  # (batch, n_valid, pending result, t0)
+
+    def _drain_one():
+        batch, n_valid, fut, t0 = inflight.popleft()
+        jax.block_until_ready(fut)
+        lat_ms.append((time.perf_counter() - t0) * 1e3)
+        pred = np.asarray(fut)[:n_valid]
+        ofs = 0
+        for r in batch:
+            responses[r.rid] = pred[ofs:ofs + r.size]
+            ofs += r.size
+
     for batch in batches:
+        # Host-side prep of batch k+1 overlaps device work on batch k.
         feats = np.concatenate([r.feats for r in batch])
         padded, n_valid = pad_to_multiple(feats, tile)
         rows_real += n_valid
         rows_padded += padded.shape[0]
         t0 = time.perf_counter()
-        pred = jax.block_until_ready(predict(padded))
-        lat_ms.append((time.perf_counter() - t0) * 1e3)
-        pred = np.asarray(pred)[:n_valid]
-        ofs = 0
-        for r in batch:
-            responses[r.rid] = pred[ofs:ofs + r.size]
-            ofs += r.size
+        inflight.append((batch, n_valid, predict(padded), t0))
+        while len(inflight) >= depth:
+            _drain_one()
+    while inflight:
+        _drain_one()
     lat = np.asarray(lat_ms) if lat_ms else np.zeros((1,))
     stats = {
+        "depth": depth,
         "batches": len(batches),
         "rows_real": rows_real,
         "rows_padded": rows_padded,
@@ -158,20 +183,28 @@ def build_report(deployed, requests: Sequence[Request], stats: Dict,
     """Assemble the serving JSON report — the driver's output contract.
 
     Key set and value types are stable (asserted in
-    tests/test_serving.py); downstream dashboards parse this.
+    tests/test_serving.py); downstream dashboards parse this. Works for
+    any ``DeployedArtifact`` backend (and its sharded wrapper): the
+    ``backend`` / ``devices`` fields make reports from different
+    substrates and device counts comparable.
     """
     n_rows = sum(r.size for r in requests)
+    devices = int(getattr(deployed, "n_devices", 1))
+    rows_per_s = round(n_rows / wall_s, 1) if wall_s else 0.0
     return {
         "workload": "memhd_classify",
-        "packed": deployed.packed,
-        "mode": deployed.mode if deployed.packed else "float",
+        "backend": deployed.backend,
+        "devices": devices,
+        "packed": bool(getattr(deployed, "packed", False)),
+        "mode": deployed.serving_mode,
         "pipeline": "fused" if fused else "staged",
         "geometry": f"{deployed.am_cfg.dim}x{deployed.am_cfg.columns}",
         "requests": len(requests),
         "rows": n_rows,
         "wall_s": round(wall_s, 3),
         "qps": round(len(requests) / wall_s, 1) if wall_s else 0.0,
-        "rows_per_s": round(n_rows / wall_s, 1) if wall_s else 0.0,
+        "rows_per_s": rows_per_s,
+        "rows_per_s_per_device": round(rows_per_s / devices, 1),
         "resident_am_bytes": deployed.resident_am_bytes,
         "am_memory_ratio": round(deployed.am_memory_ratio, 2),
         **stats,
@@ -186,21 +219,33 @@ def main():
     ap.add_argument("--max-size", type=int, default=32,
                     help="max rows per request")
     ap.add_argument("--max-batch", type=int, default=256)
+    ap.add_argument("--target", default=None,
+                    choices=["packed", "unpacked", "imc"],
+                    help="deployment backend (registry target)")
     ap.add_argument("--mode", default="popcount",
                     choices=["popcount", "unpack"])
     ap.add_argument("--unpacked", action="store_true",
-                    help="serve the float AM instead (parity baseline)")
+                    help="legacy alias for --target unpacked")
     ap.add_argument("--fused", action="store_true",
                     help="serve raw features through the single-dispatch "
                          "fused encode->pack->search pipeline")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="shard every batch over the first N local "
+                         "devices (data-parallel serving)")
+    ap.add_argument("--depth", type=int, default=2,
+                    help="double-buffer depth (batches in flight)")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
 
-    if args.fused and args.unpacked:
-        ap.error("--fused needs the packed artifact (drop --unpacked)")
+    if args.target and args.unpacked:
+        ap.error("--unpacked is the legacy alias; drop it with --target")
+    target = args.target or ("unpacked" if args.unpacked else "packed")
+    if args.fused and target != "packed":
+        ap.error("--fused needs the packed backend (--target packed)")
 
     from repro.core import EncoderConfig, MemhdConfig, MemhdModel
     from repro.data import load_dataset
+    from repro.deploy import ShardedArtifact
 
     per_class = 80 if args.smoke else 400
     epochs = 2 if args.smoke else 20
@@ -211,16 +256,24 @@ def main():
                       epochs=epochs, kmeans_iters=5)
     model = MemhdModel.create(jax.random.key(0), enc, amc)
     model, _ = model.fit(jax.random.key(1), ds.train_x, ds.train_y)
-    deployed = model.deploy(packed=not args.unpacked, mode=args.mode)
+    if target in ("packed", "unpacked"):
+        deployed = model.deploy(target=target, mode=args.mode)
+    else:
+        deployed = model.deploy(target=target)
+    if args.devices > 1:
+        deployed = ShardedArtifact(deployed, devices=args.devices)
+        log.info("sharded serving over %d devices", args.devices)
 
     reqs = synthetic_requests(np.asarray(ds.test_x), args.requests,
                               args.max_size)
     # Warmup pass compiles every padded batch shape; the timed pass then
     # measures pure serving.
-    serve_batches(deployed, reqs, args.max_batch, fused=args.fused)
+    serve_batches(deployed, reqs, args.max_batch, fused=args.fused,
+                  depth=args.depth)
     t0 = time.time()
     responses, stats = serve_batches(deployed, reqs, args.max_batch,
-                                     warmup=False, fused=args.fused)
+                                     warmup=False, fused=args.fused,
+                                     depth=args.depth)
     wall = time.time() - t0
     print(json.dumps(build_report(deployed, reqs, stats, wall,
                                   fused=args.fused), indent=1))

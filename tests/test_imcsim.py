@@ -306,6 +306,29 @@ class TestImcDeployment:
             ImcSimConfig(noise_sigma=1.5, seed=7))
         assert noisy < clean
 
+    def test_score_traces_once_on_ragged_set(self, trained):
+        """Regression: ``score`` routes through the padded batched
+        evaluator, so a ragged tail batch must NOT retrace/recompile
+        the predict path — every batch it issues has ONE shape."""
+        ds, m = trained
+        dep = m.deploy(target="imc")
+        n, batch = 77, 32  # 77 = 2 full batches + a ragged 13-row tail
+        traces = []
+        inner = type(dep).predict
+
+        @jax.jit
+        def counting_predict(feats):
+            traces.append(feats.shape)  # runs only when (re)tracing
+            return inner(dep, feats)
+
+        dep.predict = counting_predict  # instance shadows the method
+        acc = dep.score(ds.test_x[:n], ds.test_y[:n], batch=batch)
+        assert len(traces) == 1, f"retraced: {traces}"
+        assert traces[0] == (batch, ds.test_x.shape[1])
+        want = float(np.mean(np.asarray(m.predict(ds.test_x[:n]))
+                             == np.asarray(ds.test_y[:n])))
+        assert acc == pytest.approx(want)
+
 
 class TestRobustnessSweeps:
     def test_sweep_rows(self, trained):

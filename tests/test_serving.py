@@ -97,14 +97,46 @@ class TestFusedServing:
             np.asarray(dep_u.predict(ds.test_x[:16])))
 
 
+class TestDoubleBuffering:
+    """The double-buffered batcher: identical responses at any depth."""
+
+    def test_depths_agree(self, served):
+        ds, _, dep = served
+        reqs = synthetic_requests(np.asarray(ds.test_x), n_requests=9,
+                                  max_size=7, seed=11)
+        sync, s_stats = serve_batches(dep, reqs, max_batch=24, depth=1)
+        for depth in (2, 4):
+            buf, b_stats = serve_batches(dep, reqs, max_batch=24,
+                                         depth=depth)
+            assert sync.keys() == buf.keys()
+            for rid in sync:
+                np.testing.assert_array_equal(sync[rid], buf[rid])
+            # Batching/padding accounting is independent of the depth;
+            # the depth field tags which latency semantics apply.
+            assert b_stats["rows_padded"] == s_stats["rows_padded"]
+            assert b_stats["batches"] == s_stats["batches"]
+            assert b_stats["depth"] == depth and s_stats["depth"] == 1
+
+    def test_bad_depth_rejected(self, served):
+        ds, _, dep = served
+        with pytest.raises(ValueError, match="depth"):
+            serve_batches(dep, _reqs([4]), depth=0)
+
+
 class TestReportSchema:
-    """The JSON report is a parsing contract; its key set is frozen."""
+    """The JSON report is a parsing contract; its key set is frozen.
+
+    ``backend`` + ``devices`` (and the per-device throughput) make
+    reports from different deployment backends and device counts
+    comparable — asserted here for every registered backend.
+    """
 
     KEYS = {
-        "workload", "packed", "mode", "pipeline", "geometry", "requests",
-        "rows", "wall_s", "qps", "rows_per_s", "resident_am_bytes",
-        "am_memory_ratio", "batches", "rows_real", "rows_padded",
-        "pad_overhead", "lat_ms_p50", "lat_ms_p95", "lat_ms_total",
+        "workload", "backend", "devices", "packed", "mode", "pipeline",
+        "geometry", "requests", "rows", "wall_s", "qps", "rows_per_s",
+        "rows_per_s_per_device", "resident_am_bytes", "am_memory_ratio",
+        "depth", "batches", "rows_real", "rows_padded", "pad_overhead",
+        "lat_ms_p50", "lat_ms_p95", "lat_ms_total",
     }
 
     def test_schema_stable(self, served):
@@ -119,8 +151,11 @@ class TestReportSchema:
             assert set(rep) == self.KEYS
             assert rep["pipeline"] == ("fused" if fused else "staged")
             assert rep["workload"] == "memhd_classify"
+            assert rep["backend"] == "packed"
+            assert rep["devices"] == 1
             assert rep["rows"] == sum(r.size for r in reqs)
             assert rep["qps"] == round(len(reqs) / 0.25, 1)
+            assert rep["rows_per_s_per_device"] == rep["rows_per_s"]
 
     def test_unpacked_report_mode(self, served):
         ds, m, _ = served
@@ -131,3 +166,16 @@ class TestReportSchema:
         rep = build_report(dep_u, reqs, stats, wall_s=0.1)
         assert set(rep) == self.KEYS
         assert rep["mode"] == "float" and rep["packed"] is False
+        assert rep["backend"] == "unpacked"
+
+    def test_imc_backend_report(self, served):
+        ds, m, _ = served
+        dep_i = m.deploy(target="imc")
+        reqs = synthetic_requests(np.asarray(ds.test_x), n_requests=2,
+                                  max_size=4, seed=0)
+        _, stats = serve_batches(dep_i, reqs, max_batch=8)
+        rep = build_report(dep_i, reqs, stats, wall_s=0.1)
+        assert set(rep) == self.KEYS
+        assert rep["backend"] == "imc"
+        assert rep["mode"] == "analog" and rep["packed"] is False
+        assert rep["resident_am_bytes"] == dep_i.resident_bytes

@@ -1,0 +1,185 @@
+"""Multi-device sharded serving: ShardedArtifact parity (every backend),
+ragged-tail masking, serve_batches integration + report fields, and the
+8-forced-device bit-exactness contract (subprocess)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.deploy import ShardedArtifact, serving_mesh
+
+from _multidev import check_multidev
+
+
+def _random_model(features=24, dim=128, columns=48, classes=10, seed=0):
+    """An untrained model with a random AM — serving needs no fit."""
+    from repro.core import EncoderConfig, MemhdConfig, MemhdModel
+    from repro.core import am as am_lib
+    enc = EncoderConfig(kind="projection", features=features, dim=dim)
+    amc = MemhdConfig(dim=dim, columns=columns, classes=classes)
+    m = MemhdModel.create(jax.random.key(seed), enc, amc)
+    rng = np.random.default_rng(seed)
+    fp = jnp.asarray(rng.normal(size=(columns, dim)).astype(np.float32))
+    owners = jnp.asarray(np.arange(columns) % classes, np.int32)
+    state = am_lib.make_am_state(fp, owners, amc.threshold)
+    return dataclasses.replace(m, am_state=state)
+
+
+@pytest.fixture(scope="module")
+def model():
+    return _random_model()
+
+
+@pytest.fixture(scope="module")
+def feats():
+    rng = np.random.default_rng(3)
+    return rng.normal(size=(53, 24)).astype(np.float32)  # ragged: 53
+
+
+class TestShardedWrapper:
+    """In-process checks on a 1-device mesh (the real multi-device
+    parity runs in the subprocess tests below)."""
+
+    @pytest.mark.parametrize("target", ["packed", "unpacked", "imc"])
+    def test_parity_every_backend(self, model, feats, target):
+        dep = model.deploy(target=target)
+        sh = ShardedArtifact(dep, devices=1)
+        want = np.asarray(dep.predict(feats))
+        np.testing.assert_array_equal(np.asarray(sh.predict(feats)),
+                                      want)
+        np.testing.assert_array_equal(
+            np.asarray(sh.predict_features(feats)), want)
+
+    def test_ragged_rows_masked(self, model, feats):
+        # Any batch size — including one not divisible by the mesh —
+        # returns exactly n predictions (pad rows are dropped).
+        dep = model.deploy(target="packed")
+        sh = ShardedArtifact(dep, devices=1)
+        for n in (1, 7, 8, 13):
+            assert sh.predict(feats[:n]).shape == (n,)
+
+    def test_predict_query_and_score(self, model, feats):
+        dep = model.deploy(target="packed")
+        sh = ShardedArtifact(dep, devices=1)
+        q = model.encode_query(feats)
+        np.testing.assert_array_equal(
+            np.asarray(sh.predict_query(q)),
+            np.asarray(dep.predict_query(q)))
+        labels = np.asarray(model.predict(feats))
+        assert sh.score(feats, labels) == 1.0
+
+    def test_protocol_delegation(self, model):
+        dep = model.deploy(target="packed")
+        sh = ShardedArtifact(dep, devices=1)
+        assert sh.backend == "packed"
+        assert sh.serving_mode == dep.serving_mode
+        assert sh.resident_am_bytes == dep.resident_am_bytes
+        assert sh.am_cfg == dep.am_cfg
+        assert sh.n_devices == 1 and sh.row_multiple == 1
+        with pytest.raises(TypeError, match="already sharded"):
+            ShardedArtifact(sh, devices=1)
+
+    def test_mesh_validation(self, model):
+        with pytest.raises(ValueError, match="devices"):
+            serving_mesh(n=len(jax.devices()) + 1)
+
+    def test_serve_batches_and_report(self, model, feats):
+        from repro.launch.serve_memhd import (Request, build_report,
+                                              serve_batches,
+                                              synthetic_requests)
+        dep = model.deploy(target="packed")
+        sh = ShardedArtifact(dep, devices=1)
+        reqs = synthetic_requests(feats, n_requests=6, max_size=9,
+                                  seed=1)
+        plain, _ = serve_batches(dep, reqs, max_batch=24)
+        shard, stats = serve_batches(sh, reqs, max_batch=24)
+        assert plain.keys() == shard.keys()
+        for rid in plain:
+            np.testing.assert_array_equal(plain[rid], shard[rid])
+        rep = build_report(sh, reqs, stats, wall_s=0.5)
+        assert rep["devices"] == 1 and rep["backend"] == "packed"
+        del Request  # imported for the namespace check only
+
+
+_SUBPROCESS_PARITY = r"""
+import dataclasses
+import jax, numpy as np
+import jax.numpy as jnp
+assert jax.device_count() == 8, jax.device_count()
+from repro.core import EncoderConfig, MemhdConfig, MemhdModel
+from repro.core import am as am_lib
+from repro.deploy import ShardedArtifact
+
+enc = EncoderConfig(kind="projection", features=24, dim=128)
+amc = MemhdConfig(dim=128, columns=48, classes=10)
+m = MemhdModel.create(jax.random.key(0), enc, amc)
+rng = np.random.default_rng(0)
+fp = jnp.asarray(rng.normal(size=(48, 128)).astype(np.float32))
+owners = jnp.asarray(np.arange(48) % 10, np.int32)
+m = dataclasses.replace(
+    m, am_state=am_lib.make_am_state(fp, owners, amc.threshold))
+x = rng.normal(size=(83, 24)).astype(np.float32)  # 83 % 8 != 0
+
+for target in ("packed", "imc"):
+    dep = m.deploy(target=target)
+    want = np.asarray(dep.predict(x))
+    sh = ShardedArtifact(dep, devices=8)
+    assert sh.n_devices == 8
+    got = np.asarray(sh.predict(x))
+    assert got.shape == want.shape
+    assert (got == want).all(), target
+    got_f = np.asarray(sh.predict_features(x))
+    assert (got_f == want).all(), target
+print("SHARDED_PARITY_OK")
+"""
+
+_SUBPROCESS_SERVE = r"""
+import dataclasses
+import jax, numpy as np
+import jax.numpy as jnp
+assert jax.device_count() == 8, jax.device_count()
+from repro.core import EncoderConfig, MemhdConfig, MemhdModel
+from repro.core import am as am_lib
+from repro.deploy import ShardedArtifact
+from repro.launch.serve_memhd import (build_report, serve_batches,
+                                      synthetic_requests)
+
+enc = EncoderConfig(kind="projection", features=24, dim=128)
+amc = MemhdConfig(dim=128, columns=48, classes=10)
+m = MemhdModel.create(jax.random.key(0), enc, amc)
+rng = np.random.default_rng(0)
+fp = jnp.asarray(rng.normal(size=(48, 128)).astype(np.float32))
+owners = jnp.asarray(np.arange(48) % 10, np.int32)
+m = dataclasses.replace(
+    m, am_state=am_lib.make_am_state(fp, owners, amc.threshold))
+pool = rng.normal(size=(200, 24)).astype(np.float32)
+reqs = synthetic_requests(pool, n_requests=11, max_size=9, seed=7)
+
+dep = m.deploy(target="packed")
+sh = ShardedArtifact(dep, devices=8)
+plain, _ = serve_batches(dep, reqs, max_batch=32)
+shard, stats = serve_batches(sh, reqs, max_batch=32, depth=3)
+assert plain.keys() == shard.keys()
+for rid in plain:
+    assert (plain[rid] == shard[rid]).all(), rid
+assert stats["rows_padded"] % 8 == 0  # every batch splits evenly
+rep = build_report(sh, reqs, stats, wall_s=0.5)
+assert rep["devices"] == 8 and rep["backend"] == "packed"
+assert rep["rows_per_s_per_device"] == round(rep["rows_per_s"] / 8, 1)
+print("SHARDED_SERVE_OK")
+"""
+
+
+class TestShardedMultiDevice:
+    """8 forced host devices (fresh subprocess): sharded serving is
+    bit-exact with the single-device path, ragged tails included."""
+
+    def test_bit_exact_8_devices(self):
+        out = check_multidev(_SUBPROCESS_PARITY, n_devices=8)
+        assert "SHARDED_PARITY_OK" in out
+
+    def test_serve_batches_8_devices(self):
+        out = check_multidev(_SUBPROCESS_SERVE, n_devices=8)
+        assert "SHARDED_SERVE_OK" in out
