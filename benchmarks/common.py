@@ -1,15 +1,21 @@
-"""Shared benchmark utilities: timing, dataset cache, CSV emission.
+"""Shared benchmark utilities: timing, dataset cache, row emission.
 
 Every benchmark prints rows ``name,us_per_call,derived`` (derived =
 the figure/table quantity being reproduced: accuracy, ratio, cycles...).
+Rows are ALSO mirrored into the active ``benchmarks.record`` recorder
+(opened by ``benchmarks.run`` around each bench) so each run persists a
+structured ``BENCH_<name>.json`` artifact instead of evaporating with
+stdout; ``time_fn`` attaches its full sample stats (min/p50/p95/p99) to
+the matching row automatically.
 """
 from __future__ import annotations
 
-import functools
 import time
 from typing import Callable, Dict
 
 import jax
+
+from benchmarks import record
 
 _DATA_CACHE: Dict[str, object] = {}
 
@@ -30,23 +36,35 @@ def dataset(name: str):
 
 
 def time_fn(fn: Callable, *args, iters: int = 3, warmup: int = 1) -> float:
-    """Median wall-time per call in microseconds (blocks on jax arrays)."""
+    """True-median wall-time per call in microseconds (blocks on jax
+    arrays). The full sample statistics (min alongside the median, so
+    jitter on the 1-core CI container is visible; p95/p99 for larger
+    ``iters``) are registered with the active recorder and attach to
+    the next ``row`` emitted with this median as its ``us_per_call``.
+    """
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)
-    times = []
+    samples = []
     for _ in range(iters):
         t0 = time.perf_counter()
         out = fn(*args)
         jax.block_until_ready(out)
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2] * 1e6
+        samples.append(time.perf_counter() - t0)
+    stats = record.timing_stats(samples)
+    record.note_timing(stats)
+    return stats["p50_us"]
 
 
-def row(name: str, us_per_call: float, derived) -> str:
+def row(name: str, us_per_call: float, derived, **extra) -> str:
+    """Emit one bench row: CSV to stdout + structured to the recorder.
+
+    ``extra`` keys land verbatim in the metric's JSON record (use for
+    structured values the CSV ``derived`` string flattens away).
+    """
     line = f"{name},{us_per_call:.1f},{derived}"
     print(line, flush=True)
+    record.emit_row(name, us_per_call, derived, **extra)
     return line
 
 

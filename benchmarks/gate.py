@@ -1,0 +1,190 @@
+"""Perf regression gate: diff BENCH_*.json runs against the baselines.
+
+The loud half of the perf trajectory: ``benchmarks.run`` records every
+bench into ``BENCH_<name>.json`` (see ``benchmarks.record``); this gate
+compares a fresh run against the committed baseline set and exits
+non-zero when the trajectory regresses:
+
+  * a baseline bench has no current record           -> FAIL
+  * a baseline metric is missing from the current run -> FAIL
+  * a baseline metric had timing stats but the current one lost them
+    (a bench silently stopped timing)                 -> FAIL
+  * a timed metric slowed down by more than
+    ``--max-slowdown-pct`` percent                    -> FAIL
+  * schema_version mismatch                           -> FAIL
+
+New benches / new metrics in the current run pass (they become
+baselines when ``--update-baselines`` refreshes the committed set).
+Timings compare on ``min_us`` (the most machine-stable statistic of a
+small sample; falls back to ``us_per_call`` for rows timed outside
+``time_fn``) and ignore sub-``--min-us`` measurements, which are pure
+scheduler noise. Structural checks are exact on any machine; the
+timing threshold is meant to be strict for same-machine comparisons
+(default 100%) and opened up for cross-machine CI (the workflow passes
+``--max-slowdown-pct 300`` — catches an accidental O(n^2) or a kernel
+falling off its fast path, not runner jitter).
+
+Usage:
+  python -m benchmarks.run --fast                   # records a run
+  python -m benchmarks.gate                         # diff vs baselines
+  python -m benchmarks.gate --update-baselines      # refresh baselines
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import shutil
+import sys
+from typing import Dict, List, Optional, Tuple
+
+from benchmarks import record
+
+DEFAULT_MAX_SLOWDOWN_PCT = 100.0
+DEFAULT_MIN_US = 50.0
+
+
+def load_dir(path: str) -> Dict[str, Dict]:
+    """{bench_name: record} for every BENCH_*.json under ``path``."""
+    out: Dict[str, Dict] = {}
+    pattern = os.path.join(path, f"{record.RECORD_PREFIX}*.json")
+    for fn in sorted(glob.glob(pattern)):
+        with open(fn) as f:
+            rec = json.load(f)
+        name = rec.get("bench") or os.path.basename(fn)[
+            len(record.RECORD_PREFIX):-len(".json")]
+        out[name] = rec
+    return out
+
+
+def timing_us(metric: Dict) -> Optional[float]:
+    """The gate's lower-is-better timing for one metric, if it has one."""
+    if "min_us" in metric:
+        return float(metric["min_us"])
+    us = float(metric.get("us_per_call", 0.0))
+    return us if us > 0.0 else None
+
+
+def compare(baseline: Dict[str, Dict], current: Dict[str, Dict], *,
+            max_slowdown_pct: float = DEFAULT_MAX_SLOWDOWN_PCT,
+            min_us: float = DEFAULT_MIN_US,
+            ) -> Tuple[List[str], List[str]]:
+    """Diff two {bench: record} trees -> (failures, notes)."""
+    failures: List[str] = []
+    notes: List[str] = []
+    for bench, base in sorted(baseline.items()):
+        cur = current.get(bench)
+        if cur is None:
+            failures.append(f"{bench}: no current BENCH record "
+                            f"(bench vanished from the run)")
+            continue
+        if cur.get("schema_version") != base.get("schema_version"):
+            failures.append(
+                f"{bench}: schema_version {cur.get('schema_version')} "
+                f"!= baseline {base.get('schema_version')}")
+            continue
+        for name, bm in base.get("metrics", {}).items():
+            cm = cur.get("metrics", {}).get(name)
+            if cm is None:
+                failures.append(f"{bench}/{name}: metric missing from "
+                                f"the current run")
+                continue
+            t_base, t_cur = timing_us(bm), timing_us(cm)
+            if t_base is None:
+                continue  # untimed metric: presence is the contract
+            if t_cur is None:
+                failures.append(f"{bench}/{name}: baseline is timed "
+                                f"but the current metric has no timing")
+                continue
+            if t_base < min_us or t_cur < min_us:
+                continue  # sub-noise-floor measurement
+            ratio = t_cur / t_base
+            if ratio > 1.0 + max_slowdown_pct / 100.0:
+                failures.append(
+                    f"{bench}/{name}: {t_base:.1f}us -> {t_cur:.1f}us "
+                    f"({(ratio - 1) * 100:.0f}% slower, limit "
+                    f"{max_slowdown_pct:.0f}%)")
+            elif ratio < 0.5:
+                notes.append(f"{bench}/{name}: {(1 / ratio):.1f}x faster "
+                             f"({t_base:.1f}us -> {t_cur:.1f}us)")
+        extra_m = set(cur.get("metrics", {})) - set(base.get("metrics", {}))
+        if extra_m:
+            notes.append(f"{bench}: {len(extra_m)} new metric(s) not in "
+                         f"baseline")
+    for bench in sorted(set(current) - set(baseline)):
+        notes.append(f"{bench}: new bench (no baseline yet — refresh "
+                     f"with --update-baselines)")
+    return failures, notes
+
+
+def update_baselines(current_dir: str, baseline_dir: str) -> List[str]:
+    os.makedirs(baseline_dir, exist_ok=True)
+    copied = []
+    pattern = os.path.join(current_dir, f"{record.RECORD_PREFIX}*.json")
+    for fn in sorted(glob.glob(pattern)):
+        dst = os.path.join(baseline_dir, os.path.basename(fn))
+        shutil.copyfile(fn, dst)
+        copied.append(dst)
+    return copied
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default=record.baselines_dir(),
+                    help="committed baseline dir (BENCH_*.json)")
+    ap.add_argument("--current", default=record.results_dir(),
+                    help="fresh run dir (benchmarks.run --record-dir)")
+    ap.add_argument("--max-slowdown-pct", type=float,
+                    default=DEFAULT_MAX_SLOWDOWN_PCT,
+                    help="fail when a timed metric slows by more than "
+                         "this percent (default %(default)s)")
+    ap.add_argument("--min-us", type=float, default=DEFAULT_MIN_US,
+                    help="ignore timings below this noise floor")
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="copy the current records over the baselines "
+                         "instead of gating")
+    args = ap.parse_args(argv)
+
+    if args.update_baselines:
+        copied = update_baselines(args.current, args.baseline)
+        if not copied:
+            print(f"gate: no {record.RECORD_PREFIX}*.json under "
+                  f"{args.current} to promote", file=sys.stderr)
+            return 1
+        for p in copied:
+            print(f"gate: baseline <- {p}")
+        return 0
+
+    baseline = load_dir(args.baseline)
+    current = load_dir(args.current)
+    # An empty side means the gate is pointed at the wrong place — the
+    # silent-success failure mode this PR exists to kill.
+    if not baseline:
+        print(f"gate: no baselines under {args.baseline} "
+              f"(seed them with --update-baselines)", file=sys.stderr)
+        return 1
+    if not current:
+        print(f"gate: no current records under {args.current} "
+              f"(run: python -m benchmarks.run --fast "
+              f"--record-dir {args.current})", file=sys.stderr)
+        return 1
+
+    failures, notes = compare(
+        baseline, current, max_slowdown_pct=args.max_slowdown_pct,
+        min_us=args.min_us)
+    for n in notes:
+        print(f"gate: note: {n}")
+    if failures:
+        for f_ in failures:
+            print(f"gate: FAIL: {f_}", file=sys.stderr)
+        print(f"gate: {len(failures)} regression(s) vs "
+              f"{args.baseline}", file=sys.stderr)
+        return 1
+    print(f"gate: OK — {len(baseline)} bench(es), no regressions "
+          f"(threshold {args.max_slowdown_pct:.0f}%)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

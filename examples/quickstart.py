@@ -99,6 +99,33 @@ scale it up from the call below:
 
       PYTHONPATH=src python -m repro.launch.train --arch memhd \\
           --smoke --steps 20 --ckpt-dir /tmp/memhd_run
+
+Tracking performance
+--------------------
+Every bench run persists its numbers — they no longer evaporate with
+the terminal. ``python -m benchmarks.run --fast`` writes one
+schema-versioned ``BENCH_<name>.json`` per bench (QPS, true-median /
+min / p95 / p99 latencies, per-kernel microbench times, git SHA) into
+``benchmarks/results/`` (override: ``--record-dir`` or
+``$MEMHD_BENCH_DIR``); the serving driver joins the same trajectory
+via ``python -m repro.launch.serve_memhd --smoke --record-dir ...``.
+The regression gate diffs a fresh run against the committed baselines
+in ``benchmarks/baselines/`` and exits non-zero on slowdowns or
+silently-vanished metrics (CI runs it on every PR):
+
+    python -m benchmarks.run --fast            # record a run
+    python -m benchmarks.gate                  # diff vs baselines
+    python -m benchmarks.gate --update-baselines   # promote a run
+
+Selection is loud now: ``--only fig3`` prints what each token resolved
+to, overrides ``--fast``, and exits non-zero when a token matches
+nothing. The three hot-path kernels (``am_search_packed``,
+``encode_pack``, ``qail_update``) read their batch-tile height from a
+committed autotune cache (searched over tilings under a VMEM budget,
+every candidate bit-exact with its ``ref.py`` oracle); re-tune after
+changing a kernel with:
+
+    PYTHONPATH=src python -m repro.kernels.autotune --kernel all
 """
 import jax
 

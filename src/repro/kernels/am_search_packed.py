@@ -54,6 +54,13 @@ Array = jax.Array
 TILE = 128          # unpacked dims / centroid columns per grid step
 TILE_P = TILE // 8  # packed bytes per 128-dim slab
 
+# Batch-tile height: the one free tiling knob (TILE is the IMC-array
+# contract). DEFAULT_BLOCK_B is the untuned fallback; TUNE_BLOCK_B is
+# the candidate ladder ``kernels.autotune`` searches, bounded above by
+# the VMEM footprint of the (bb, TILE_P, TILE) popcount XOR broadcast.
+DEFAULT_BLOCK_B = 256
+TUNE_BLOCK_B = (64, 128, 256, 512, 1024)
+
 
 def _popcount8(v: Array) -> Array:
     """Population count of a byte held in int32, 3-step SWAR."""
@@ -159,7 +166,8 @@ def pack_rows(x: Array) -> Array:
     "n_dims", "n_cols", "block_b", "mode", "interpret"))
 def am_search_packed(q_packed: Array, am_packed_t: Array, *,
                      n_dims: int, n_cols: int | None = None,
-                     block_b: int = 256, mode: str = "popcount",
+                     block_b: int = DEFAULT_BLOCK_B,
+                     mode: str = "popcount",
                      interpret: bool | None = None,
                      ) -> tuple[Array, Array]:
     """Fused associative search over the packed 1-bit AM.

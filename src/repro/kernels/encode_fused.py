@@ -53,6 +53,12 @@ Array = jax.Array
 TILE = 128          # IMC array dim == MXU tile dim
 TILE_P = TILE // 8  # packed bytes per 128-dim slab
 
+# Batch-tile height: the free tiling knob (TILE is the IMC-geometry /
+# MXU contract). ``kernels.autotune`` searches TUNE_BLOCK_B and ops.py
+# dispatch applies the cached winner; DEFAULT_BLOCK_B is the fallback.
+DEFAULT_BLOCK_B = 128
+TUNE_BLOCK_B = (32, 64, 128, 256, 512)
+
 
 def _make_kernel(n_valid_dims: int):
     """Bind the static valid-dimension count into the kernel body."""
@@ -88,7 +94,8 @@ def _make_kernel(n_valid_dims: int):
 
 
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
-def encode_pack(feats: Array, projection: Array, *, block_b: int = 128,
+def encode_pack(feats: Array, projection: Array, *,
+                block_b: int = DEFAULT_BLOCK_B,
                 interpret: bool | None = None) -> Array:
     """Fused encode + sign + bitpack: (B, f) features -> (B, Dp) uint8.
 
@@ -135,7 +142,7 @@ def encode_pack(feats: Array, projection: Array, *, block_b: int = 128,
     "mode", "block_b", "interpret"))
 def search_from_features(feats: Array, projection: Array,
                          am_packed_t: Array, *, mode: str = "popcount",
-                         block_b: int = 128,
+                         block_b: int = DEFAULT_BLOCK_B,
                          interpret: bool | None = None,
                          ) -> tuple[Array, Array]:
     """Single-dispatch feature->search chain: encode_pack |> am_search_packed.
@@ -164,7 +171,8 @@ def search_from_features(feats: Array, projection: Array,
     "mode", "block_b", "interpret"))
 def predict_from_features(feats: Array, projection: Array,
                           am_packed_t: Array, centroid_class: Array, *,
-                          mode: str = "popcount", block_b: int = 128,
+                          mode: str = "popcount",
+                          block_b: int = DEFAULT_BLOCK_B,
                           interpret: bool | None = None) -> Array:
     """Single-dispatch feature->class pipeline (§III-D end to end).
 

@@ -3,6 +3,15 @@
 Higher layers call these; each dispatches to the Pallas kernel (TPU, or
 interpret mode elsewhere) and is validated against ``repro.kernels.ref``
 across shape/dtype sweeps in tests/test_kernels.py.
+
+The three hot-path kernels (``am_search_packed``, ``encode_pack`` and
+its fused chains, ``qail_update``) accept ``block_b=None`` (the
+default), meaning: consult the ``repro.kernels.autotune`` config cache
+for the best batch-tile height tuned for this (kernel, backend,
+geometry) and fall back to the kernel's fixed default when no tuned
+entry exists. Tuned tilings only re-tile the batch axis, so every
+config is bit-exact with the ``ref.py`` oracle (parity-checked at tune
+time and again in tests); pass an explicit ``block_b`` to pin a tile.
 """
 from __future__ import annotations
 
@@ -33,13 +42,24 @@ from repro.kernels.qail_update import qail_update as _qail_update
 
 Array = jax.Array
 
+
+def tuned_block_b(kernel: str, block_b: int | None, **dims) -> int:
+    """Resolve the batch tile for a dispatch: explicit arg wins, then
+    the autotune cache, then the kernel's DEFAULT_BLOCK_B. Runs at
+    trace time (the cache read is memoized on file mtime)."""
+    if block_b is not None:
+        return block_b
+    from repro.kernels import autotune  # deferred: package-init cycle
+    return autotune.tuned_block_b(kernel, **dims)
+
+
 __all__ = [
     "encode_mvm", "encode_pack", "am_search", "am_search_imc",
     "am_search_packed", "search_from_features", "predict_from_features",
     "pack_bits", "unpack_bits", "pack_rows", "qail_update",
     "predict_classes", "predict_packed", "predict_imc",
     "search_cycles", "imc_search_cycles", "packed_search_cycles",
-    "mvm_cycles", "encode_pack_cycles", "ref",
+    "mvm_cycles", "encode_pack_cycles", "ref", "tuned_block_b",
 ]
 
 
@@ -55,7 +75,7 @@ def encode_mvm(feats: Array, projection: Array, *, use_kernel: bool = True,
 
 
 def encode_pack(feats: Array, projection: Array, *, use_kernel: bool = True,
-                ) -> Array:
+                block_b: int | None = None) -> Array:
     """Fused encode + sign + bitpack: (B, f) -> (B, ceil(D/8)) uint8.
 
     One kernel pass: the projection MVM accumulates in VMEM and emits
@@ -65,12 +85,16 @@ def encode_pack(feats: Array, projection: Array, *, use_kernel: bool = True,
     """
     if not use_kernel:
         return ref.encode_pack(feats, projection)
-    return _encode_pack(feats, projection)
+    bb = tuned_block_b("encode_pack", block_b,
+                       f=projection.shape[0], D=projection.shape[1])
+    return _encode_pack(feats, projection, block_b=bb)
 
 
 def search_from_features(feats: Array, projection: Array,
                          am_packed_t: Array, *, mode: str = "popcount",
-                         use_kernel: bool = True) -> tuple[Array, Array]:
+                         use_kernel: bool = True,
+                         block_b: int | None = None,
+                         ) -> tuple[Array, Array]:
     """Single-dispatch feature->search chain over the packed AM.
 
     feats: (B, f); projection: (f, D) bipolar; am_packed_t: (Dp, C)
@@ -80,21 +104,25 @@ def search_from_features(feats: Array, projection: Array,
     if not use_kernel:
         qp = ref.encode_pack(feats, projection)
         return ref.am_search_packed(qp, am_packed_t, projection.shape[1])
+    bb = tuned_block_b("encode_pack", block_b,
+                       f=projection.shape[0], D=projection.shape[1])
     return _search_from_features(feats, projection, am_packed_t,
-                                 mode=mode)
+                                 mode=mode, block_b=bb)
 
 
 def predict_from_features(feats: Array, projection: Array,
                           am_packed_t: Array, centroid_class: Array, *,
                           mode: str = "popcount", use_kernel: bool = True,
-                          ) -> Array:
+                          block_b: int | None = None) -> Array:
     """End-to-end §III-D prediction from raw features, one dispatch:
     fused encode/pack -> packed search -> ownership gather."""
     if not use_kernel:
         return ref.predict_from_features(feats, projection, am_packed_t,
                                          centroid_class)
+    bb = tuned_block_b("encode_pack", block_b,
+                       f=projection.shape[0], D=projection.shape[1])
     return _predict_from_features(feats, projection, am_packed_t,
-                                  centroid_class, mode=mode)
+                                  centroid_class, mode=mode, block_b=bb)
 
 
 def am_search(queries: Array, am: Array, *, use_kernel: bool = True,
@@ -139,7 +167,7 @@ def am_search_imc(queries: Array, am: Array, *, sim, offsets: Array = None,
 
 def am_search_packed(q_packed: Array, am_packed_t: Array, *, n_dims: int,
                      mode: str = "popcount", use_kernel: bool = True,
-                     ) -> tuple[Array, Array]:
+                     block_b: int | None = None) -> tuple[Array, Array]:
     """Fused associative search over the packed 1-bit AM.
 
     q_packed: (B, Dp) uint8 packed queries (``pack_rows``);
@@ -151,8 +179,10 @@ def am_search_packed(q_packed: Array, am_packed_t: Array, *, n_dims: int,
     """
     if not use_kernel:
         return ref.am_search_packed(q_packed, am_packed_t, n_dims)
+    bb = tuned_block_b("am_search_packed", block_b, D=n_dims,
+                       C=am_packed_t.shape[1])
     return _am_search_packed(q_packed, am_packed_t, n_dims=n_dims,
-                             mode=mode)
+                             mode=mode, block_b=bb)
 
 
 def pack_rows(x: Array, *, use_kernel: bool = True) -> Array:
@@ -176,7 +206,8 @@ def unpack_bits(p: Array, *, use_kernel: bool = True) -> Array:
 
 def qail_update(q: Array, upd: Array, am_t: Array, centroid_class: Array,
                 labels: Array, mask: Array, *, lr: float,
-                use_kernel: bool = True) -> tuple[Array, Array]:
+                use_kernel: bool = True,
+                block_b: int | None = None) -> tuple[Array, Array]:
     """Fused QAIL inner step (§III-C): sims MVM + Eq. 4/5 + Eq.-(6) delta.
 
     q/upd: (B, D); am_t: (D, C) transposed binary AM; labels/mask: (B,).
@@ -186,7 +217,10 @@ def qail_update(q: Array, upd: Array, am_t: Array, centroid_class: Array,
     if not use_kernel:
         return ref.qail_update_delta(q, upd, am_t, centroid_class,
                                      labels, mask, lr)
-    return _qail_update(q, upd, am_t, centroid_class, labels, mask, lr=lr)
+    bb = tuned_block_b("qail_update", block_b, D=am_t.shape[0],
+                       C=am_t.shape[1])
+    return _qail_update(q, upd, am_t, centroid_class, labels, mask,
+                        lr=lr, block_b=bb)
 
 
 def predict_classes(queries: Array, am: Array, centroid_class: Array,

@@ -38,6 +38,13 @@ Array = jax.Array
 
 TILE = 128
 
+# Batch-tile height of the query-block grid walk: the free tiling knob
+# (the AM, payload and (C, D) delta stay VMEM-resident regardless).
+# ``kernels.autotune`` searches TUNE_BLOCK_B per geometry and ops.py
+# applies the cached winner; DEFAULT_BLOCK_B is the fallback.
+DEFAULT_BLOCK_B = 256
+TUNE_BLOCK_B = (64, 128, 256, 512, 1024)
+
 
 def _make_kernel(n_valid_cols: int, lr: float):
     """Bind the static valid-column count and learning rate."""
@@ -89,7 +96,7 @@ def _make_kernel(n_valid_cols: int, lr: float):
 @functools.partial(jax.jit, static_argnames=("lr", "block_b", "interpret"))
 def qail_update(q: Array, upd: Array, am_t: Array, centroid_class: Array,
                 labels: Array, mask: Array, *, lr: float,
-                block_b: int = 256,
+                block_b: int = DEFAULT_BLOCK_B,
                 interpret: bool | None = None) -> tuple[Array, Array]:
     """Fused QAIL inner step for one minibatch.
 

@@ -159,8 +159,10 @@ def serve_batches(deployed, requests: Sequence[Request],
         "rows_padded": rows_padded,
         "pad_overhead": (round(rows_padded / rows_real - 1, 3)
                          if rows_real else 0.0),
+        "lat_ms_min": round(float(lat.min()), 2),
         "lat_ms_p50": round(float(np.percentile(lat, 50)), 2),
         "lat_ms_p95": round(float(np.percentile(lat, 95)), 2),
+        "lat_ms_p99": round(float(np.percentile(lat, 99)), 2),
         "lat_ms_total": round(float(lat.sum()), 2),
     }
     return responses, stats
@@ -234,6 +236,10 @@ def main():
                          "devices (data-parallel serving)")
     ap.add_argument("--depth", type=int, default=2,
                     help="double-buffer depth (batches in flight)")
+    ap.add_argument("--record-dir", default=None,
+                    help="also persist the report as a schema-versioned "
+                         "BENCH_serve_memhd.json (benchmarks.record) in "
+                         "this directory — the perf-trajectory sink")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
 
@@ -275,9 +281,22 @@ def main():
                                      warmup=False, fused=args.fused,
                                      depth=args.depth)
     wall = time.time() - t0
-    print(json.dumps(build_report(deployed, reqs, stats, wall,
-                                  fused=args.fused), indent=1))
+    report = build_report(deployed, reqs, stats, wall, fused=args.fused)
+    print(json.dumps(report, indent=1))
     assert len(responses) == len(reqs)
+    if args.record_dir:
+        # benchmarks/ lives at the repo root, not under src/ — recording
+        # therefore needs the repo root on sys.path (python -m from the
+        # checkout has it). Fail loudly, never silently skip the record.
+        try:
+            from benchmarks import record
+        except ImportError as e:
+            raise SystemExit(
+                f"--record-dir needs the benchmarks package importable "
+                f"(run from the repo root): {e}")
+        path = record.from_report("serve_memhd", report,
+                                  out_dir=args.record_dir)
+        log.info("recorded -> %s", path)
 
 
 if __name__ == "__main__":

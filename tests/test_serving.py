@@ -136,7 +136,8 @@ class TestReportSchema:
         "geometry", "requests", "rows", "wall_s", "qps", "rows_per_s",
         "rows_per_s_per_device", "resident_am_bytes", "am_memory_ratio",
         "depth", "batches", "rows_real", "rows_padded", "pad_overhead",
-        "lat_ms_p50", "lat_ms_p95", "lat_ms_total",
+        "lat_ms_min", "lat_ms_p50", "lat_ms_p95", "lat_ms_p99",
+        "lat_ms_total",
     }
 
     def test_schema_stable(self, served):
