@@ -56,6 +56,25 @@ def time_fn(fn: Callable, *args, iters: int = 3, warmup: int = 1) -> float:
     return stats["p50_us"]
 
 
+def time_fn_stats(fn: Callable, *args, iters: int = 3,
+                  warmup: int = 1) -> dict:
+    """Like ``time_fn`` but returns the full stats dict. Ratio asserts
+    (speedup floors) should compare ``min_us``, not the p50: min is the
+    noise-robust estimator on a loaded 1-core container, where one
+    descheduled sample can halve a p50-based ratio. Emit rows with the
+    ``p50_us`` so the recorder's pending stats still attach."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append(time.perf_counter() - t0)
+    stats = record.timing_stats(samples)
+    record.note_timing(stats)
+    return stats
+
+
 def row(name: str, us_per_call: float, derived, **extra) -> str:
     """Emit one bench row: CSV to stdout + structured to the recorder.
 

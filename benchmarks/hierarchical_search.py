@@ -1,0 +1,182 @@
+"""Coarse-to-fine hierarchical search vs the flat packed scan.
+
+Sweeps the centroid count C from paper scale (512) to the huge-label
+regime (100k) and, per C, the shortlist width S of the two-stage
+pipeline (``am_shortlist`` over G ~ 1.4*sqrt(C) super-centroids, then
+``am_search_sparse`` over the shortlisted cluster tiles). Measures:
+
+* ``flat_c{C}`` — the linear ``am_search_packed`` scan, the baseline
+  whose cost grows linearly in C;
+* ``hier_c{C}_s{S}`` — the full two-stage dispatch (shortlist + tile
+  gather + sparse top-k), with speedup vs flat and recall@1 vs the
+  exact search as derived metrics.
+
+The AM is synthesized with *planted* cluster structure (prototype
+hypervectors + bit-flip noise; queries are noisy copies of real
+centroids) — the regime the hierarchical index is for; an iid-random AM
+has no cluster structure to exploit, and every index degenerates to
+recall ~ S/G on it. Recall@1 is tie-robust: a hit is "the returned
+top-1 similarity equals the exact maximum similarity".
+
+Asserted in-bench (the ISSUE-7 acceptance contract):
+* at C >= 32768 the hierarchical path is >= 5x faster (min over
+  timing samples) than the flat scan at the same batch, with
+  recall@1 >= 99%;
+* at C = 512 the degenerate S = G sweep point is bit-exact with
+  ``am_search_packed`` (idx and sim), the parity anchor.
+
+Recorded through benchmarks/record.py; committed baselines in
+benchmarks/baselines/BENCH_hierarchical_search.json are gated by
+benchmarks/gate.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import record
+from benchmarks.common import row, section, time_fn_stats
+
+D = 1024            # hypervector dimension (huge-label serving scale)
+BATCH = 256         # queries per timed call (256 -> recall floor allows
+                    # 2 misses at 99%)
+PROTO_FLIP = 0.08   # centroid = cluster prototype with this bit-flip rate
+QUERY_FLIP = 0.10   # query = source centroid with this bit-flip rate
+CHUNK = 16384       # host-side generation / exact-reference chunk rows
+
+# Per-C sweep. ``g_plant`` is the number of planted prototypes in the
+# synthetic AM; ``g`` is the index's group count — over-partitioned ~1.4x
+# past sqrt(C) at scale, the standard IVF trick: with G > true clusters,
+# k-means splits clusters (benign: each shard's majority-vote super still
+# matches its prototype) instead of merging them (fatal: a blended super
+# ranks low for BOTH constituent clusters' queries). The last S of each
+# sweep is the serving recommendation the asserts check; C=512 also
+# sweeps S=G (exact anchor).
+CONFIGS = (
+    {"c": 512, "g_plant": 23, "g": 23, "s_sweep": (4, 23)},
+    {"c": 4096, "g_plant": 64, "g": 64, "s_sweep": (4, 16)},
+    {"c": 32768, "g_plant": 181, "g": 256, "s_sweep": (16, 8)},
+    {"c": 100_000, "g_plant": 316, "g": 448, "s_sweep": (16, 8)},
+)
+SPEEDUP_C = 32768      # configs at/above this C must hit the floors
+SPEEDUP_FLOOR = 5.0
+RECALL_FLOOR = 0.99
+
+
+def planted_am(rng, c: int, g: int) -> tuple[np.ndarray, np.ndarray]:
+    """(C, D) int8 bipolar AM with planted cluster structure."""
+    protos = rng.choice(np.array([-1, 1], np.int8), size=(g, D))
+    assign = rng.integers(0, g, size=c)
+    am = np.empty((c, D), np.int8)
+    for i in range(0, c, CHUNK):
+        blk = protos[assign[i:i + CHUNK]]
+        flips = rng.random(blk.shape, dtype=np.float32) < PROTO_FLIP
+        am[i:i + CHUNK] = np.where(flips, -blk, blk)
+    return am, assign
+
+
+def noisy_queries(rng, am: np.ndarray) -> np.ndarray:
+    src = rng.integers(0, am.shape[0], size=BATCH)
+    q = am[src]
+    flips = rng.random(q.shape, dtype=np.float32) < QUERY_FLIP
+    return np.where(flips, -q, q).astype(np.int8)
+
+
+def exact_best_sims(q: np.ndarray, am: np.ndarray) -> np.ndarray:
+    """(B,) exact max dot similarity, chunked over C (the (B, Dp, C)
+    oracle broadcast would be ~1.6 GB at C=100k)."""
+    qf = q.astype(np.float32)
+    best = np.full(q.shape[0], -np.inf, np.float32)
+    for i in range(0, am.shape[0], CHUNK):
+        sims = qf @ am[i:i + CHUNK].astype(np.float32).T
+        best = np.maximum(best, sims.max(axis=1))
+    return best
+
+
+@functools.partial(jax.jit, static_argnames=("n_dims", "s", "k",
+                                             "max_tiles"))
+def hier_search(qp, spt, slab, col_ids, tile_start, tile_count, *,
+                n_dims: int, s: int, k: int, max_tiles: int):
+    """The full two-stage serving dispatch under one jit."""
+    from repro.kernels import ops
+    short, _ = ops.am_shortlist(qp, spt, n_dims=n_dims, s=s)
+    return ops.am_search_sparse(qp, slab, col_ids, short, tile_start,
+                                tile_count, n_dims=n_dims, k=k,
+                                max_tiles=max_tiles)
+
+
+def main() -> None:
+    from repro.deploy import hierarchical as hier
+    from repro.kernels import ops
+
+    rec = record.active()
+    if rec is not None:
+        rec.meta.update(d=D, batch=BATCH, proto_flip=PROTO_FLIP,
+                        query_flip=QUERY_FLIP)
+
+    for cfg in CONFIGS:
+        c, g = cfg["c"], cfg["g"]
+        section(f"C={c} (G={g}, planted={cfg['g_plant']}, D={D}, "
+                f"B={BATCH})")
+        rng = np.random.default_rng(c)
+        am, _ = planted_am(rng, c, cfg["g_plant"])
+        q = noisy_queries(rng, am)
+        exact = exact_best_sims(q, am)
+
+        qp = jnp.asarray(hier.pack_rows_np(q))
+        apt = jnp.asarray(hier.pack_rows_np(am).T)
+        flat_fn = jax.jit(lambda qp, apt: ops.am_search_packed(
+            qp, apt, n_dims=D))
+        flat_stats = time_fn_stats(flat_fn, qp, apt)
+        flat_idx, flat_sim = jax.tree.map(np.asarray, flat_fn(qp, apt))
+        flat_min = flat_stats["min_us"]
+        row(f"flat_c{c}", flat_stats["p50_us"],
+            f"C={c} linear packed scan", c=c)
+
+        spt, layout = hier.build_search_state(
+            jax.random.PRNGKey(c), am, g, kmeans_iters=8,
+            kmeans_sample=16384)
+        slab = jnp.asarray(layout.slab)
+        col_ids = jnp.asarray(layout.col_ids)
+        t_start = jnp.asarray(layout.tile_start)
+        t_count = jnp.asarray(layout.tile_count)
+
+        for s in cfg["s_sweep"]:
+            fn = functools.partial(hier_search, n_dims=D, s=s, k=1,
+                                   max_tiles=layout.max_tiles)
+            hier_stats = time_fn_stats(fn, qp, spt, slab, col_ids, t_start,
+                               t_count)
+            hier_min = hier_stats["min_us"]
+            idx, sim = jax.tree.map(
+                np.asarray, fn(qp, spt, slab, col_ids, t_start, t_count))
+            recall = float(np.mean(sim[:, 0] == exact))
+            speedup = flat_min / hier_min if hier_min else 0.0
+            row(f"hier_c{c}_s{s}", hier_stats["p50_us"],
+                f"speedup={speedup:.1f}x recall@1={recall:.4f}",
+                c=c, g=g, s=s, max_tiles=layout.max_tiles,
+                speedup=round(speedup, 2), recall=recall)
+
+            if s == g:
+                # Degenerate S = G contract: bit-exact with the flat scan.
+                assert np.array_equal(idx[:, 0], flat_idx), (
+                    f"C={c} S=G diverged from am_search_packed")
+                assert np.array_equal(sim[:, 0], flat_sim), (
+                    f"C={c} S=G sims diverged from am_search_packed")
+                print(f"  S=G={g}: bit-exact with flat packed scan OK")
+
+            if c >= SPEEDUP_C and s == cfg["s_sweep"][-1]:
+                assert speedup >= SPEEDUP_FLOOR, (
+                    f"C={c} S={s}: hierarchical only {speedup:.2f}x vs "
+                    f"flat (floor {SPEEDUP_FLOOR}x)")
+                assert recall >= RECALL_FLOOR, (
+                    f"C={c} S={s}: recall@1 {recall:.4f} < {RECALL_FLOOR}")
+                print(f"  asserts OK: {speedup:.1f}x >= {SPEEDUP_FLOOR}x, "
+                      f"recall {recall:.4f} >= {RECALL_FLOOR}")
+
+
+if __name__ == "__main__":
+    main()

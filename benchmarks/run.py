@@ -38,9 +38,12 @@ BENCHES = [
     ("fig6", "benchmarks.fig6_r_sweep"),
     ("ablation", "benchmarks.ablations"),
     ("roofline", "benchmarks.roofline_report"),
+    ("hillclimb", "benchmarks.hillclimb"),
+    ("hierarchical_search", "benchmarks.hierarchical_search"),
 ]
 FAST = {"table2", "fig7", "kernel", "packed", "pipeline",
-        "train_throughput", "fig_robustness", "roofline"}
+        "train_throughput", "fig_robustness", "roofline",
+        "hierarchical_search"}
 
 
 def resolve_selection(only: str | None, fast: bool,

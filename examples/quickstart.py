@@ -55,6 +55,44 @@ tagged with ``backend`` and ``devices``). The scaling sweep lives in
 ``python -m benchmarks.serve_scaling``; the kernel comparisons in
 ``benchmarks/packed_vs_unpacked.py`` and ``--only pipeline``.
 
+Scaling to huge label spaces
+----------------------------
+The flat packed scan is linear in the class count C — fine at the
+paper's C = 128, a wall at 100k classes. ``target="hierarchical"``
+deploys a two-stage coarse-to-fine index over the SAME trained AM:
+offline, the centroids are k-means-clustered (k-means++ seeded,
+capacity-balanced) into G ~ 1.4*sqrt(C) super-centroids and physically
+permuted so each cluster occupies contiguous 128-column packed tiles;
+online, a first Pallas pass
+(``am_shortlist``) scores the query against the G packed
+super-centroids and shortlists the S best clusters, and a second pass
+(``am_search_sparse``) gathers only those clusters' tiles and runs the
+packed scan with a fused streaming top-k epilogue — query cost
+O(G + S * C/G) instead of O(C):
+
+    dep = model.deploy(target="hierarchical")            # exact: S = G
+    dep = model.deploy(target="hierarchical",
+                       groups=448, shortlist=8)          # sublinear
+    classes, ids, sims = dep.predict_topk(feats, k=5)    # fused top-k
+
+The defaults are the DEGENERATE configuration S = G, which is
+bit-exact with the flat packed scan (asserted in-bench and in tests) —
+speed becomes opt-in by choosing S < G, trading recall@1 (>= 99% on
+clustered label spaces at the benchmark's settings) for a >= 5x scan
+reduction at C >= 32k (``python -m benchmarks.run --only
+hierarchical_search`` sweeps C in {512, 4k, 32k, 100k} and asserts
+both floors). Guidance: G ~ 1.4*sqrt(C) — the over-partitioning makes
+k-means split natural clusters (benign) rather than merge them (a
+recall hole no S can fix); raise S until recall@1 plateaus (8-16 is
+the bench's sweet spot). Top-k serving rides the same driver flags and
+report schema:
+
+    python -m repro.launch.serve_memhd --smoke \\
+        --target hierarchical --topk 5
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        python -m repro.launch.serve_memhd --smoke --devices 8 \\
+            --target hierarchical --topk 5        # sharded, bit-exact
+
 Recovering accuracy on noisy devices
 ------------------------------------
 The accuracy a lossy ``"imc"`` deployment costs is recoverable:
@@ -119,8 +157,9 @@ silently-vanished metrics (CI runs it on every PR):
 
 Selection is loud now: ``--only fig3`` prints what each token resolved
 to, overrides ``--fast``, and exits non-zero when a token matches
-nothing. The three hot-path kernels (``am_search_packed``,
-``encode_pack``, ``qail_update``) read their batch-tile height from a
+nothing. The five hot-path kernels (``am_search_packed``,
+``encode_pack``, ``qail_update``, ``am_shortlist``,
+``am_search_sparse``) read their batch-tile height from a
 committed autotune cache (searched over tilings under a VMEM budget,
 every candidate bit-exact with its ``ref.py`` oracle); re-tune after
 changing a kernel with:
@@ -183,6 +222,17 @@ def main():
     assert (pred_fused == pred_staged).all()
     print(f"fused feature serving: {pred_fused.shape[0]} requests, "
           f"predictions bit-exact with the staged pipeline")
+
+    # Coarse-to-fine deployment: at its exact defaults (S = G) the
+    # hierarchical index reproduces the packed scan bit for bit, and
+    # adds the fused top-k epilogue; at 100k classes S < G makes the
+    # scan sublinear (see the docstring section above).
+    hier = model.deploy(target="hierarchical")
+    assert (np.asarray(hier.predict(ds.test_x)) == pred_staged).all()
+    top5, _, _ = hier.predict_topk(ds.test_x[:256], 5)
+    assert (np.asarray(top5)[:, 0] == pred_staged[:256]).all()
+    print(f"hierarchical deployment ({hier.serving_mode}): bit-exact "
+          f"with packed; top-5 classes served in one fused dispatch")
 
     # Deploying to noisy IMC arrays: an ideal simulated device is
     # bit-exact with the digital path...

@@ -46,6 +46,7 @@ def assign_dot(h: Array, centroids: Array) -> Array:
 def kmeans_dot(key: Array, h: Array, n_clusters: int,
                n_iters: int = 25,
                sample_weight: Array | None = None,
+               init: Array | None = None,
                ) -> Tuple[Array, Array]:
     """Run dot-similarity K-means.
 
@@ -58,6 +59,11 @@ def kmeans_dot(key: Array, h: Array, n_clusters: int,
         call is unnecessary).
       sample_weight: optional (n,) non-negative weights (padding rows in
         callers use weight 0 so they never influence centroids).
+      init: optional (K, D) initial centroids (normalized internally).
+        Random-row init loses ~1/e of well-separated clusters to seed
+        collisions and the one-reseed-per-iteration repair can't recover
+        them all; callers who need every cluster found (hierarchical AM
+        search) pass k-means++ seeds here.
 
     Returns:
       (centroids, assignment): ((K, D) float32, (n,) int32).
@@ -67,10 +73,14 @@ def kmeans_dot(key: Array, h: Array, n_clusters: int,
         sample_weight = jnp.ones((n,), jnp.float32)
     w = sample_weight.astype(jnp.float32)
 
-    # Weighted random init: sample K distinct-ish rows.
-    p = w / jnp.maximum(w.sum(), 1e-8)
-    init_idx = jax.random.choice(key, n, (n_clusters,), replace=False, p=p)
-    c0 = _l2_normalize(h[init_idx])
+    if init is not None:
+        c0 = _l2_normalize(init.astype(jnp.float32))
+    else:
+        # Weighted random init: sample K distinct-ish rows.
+        p = w / jnp.maximum(w.sum(), 1e-8)
+        init_idx = jax.random.choice(key, n, (n_clusters,),
+                                     replace=False, p=p)
+        c0 = _l2_normalize(h[init_idx])
 
     def step(carry, _):
         c, _prev = carry

@@ -28,6 +28,9 @@ from repro.deploy.base import DeployedArtifact, pytree_artifact  # noqa: F401
 from repro.deploy.digital import (  # noqa: F401
     DeployedMemhd, deploy_packed, deploy_unpacked,
 )
+from repro.deploy.hierarchical import (  # noqa: F401
+    HierarchicalMemhd, deploy_hierarchical,
+)
 from repro.deploy.padding import (  # noqa: F401
     pad_rows, pad_tiles, pad_to_multiple, pad_vec, round_up,
 )

@@ -1,0 +1,434 @@
+"""``target="hierarchical"``: coarse-to-fine top-k deployment backend.
+
+Freezes a trained MEMHD model into a two-stage search artifact for huge
+label spaces (C·centroids in the 10^5+ regime, where the flat packed
+scan's linear cost is the wrong algorithm):
+
+* **offline** — ``cluster_am`` groups the trained AM's C binary
+  centroids into G clusters with the same dot-similarity kmeans the
+  paper trains with (``core/kmeans.kmeans_dot``), binarizes each
+  cluster mean into a packed *super-centroid*, and ``build_layout``
+  physically permutes the packed AM so every cluster owns a contiguous
+  run of 128-column tiles inside one ``am_search_packed``-contract slab
+  (plus a trailing all-invalid null tile that absorbs short-cluster
+  padding in the gather);
+* **online** — ``kernels/am_shortlist`` scores the query against the G
+  super-centroids and keeps the S best clusters, then
+  ``kernels/am_search_sparse`` gathers and searches only those
+  clusters' tiles with a fused streaming top-k epilogue.
+
+Recall knobs: ``groups`` (G, default ~1.4*sqrt(C)) and ``shortlist`` (S,
+default G). **The default S = G is the exact degenerate configuration**
+— every cluster is searched and results are bit-exact with the flat
+packed scan (the registry-wide parity tests hold verbatim); dialing
+S < G buys sublinear query cost at a measured recall cost
+(``benchmarks/hierarchical_search.py`` sweeps the trade-off).
+
+The artifact is an ordinary ``DeployedArtifact`` pytree: it jits,
+composes with ``ShardedArtifact`` data-parallel serving, and serves
+through ``serve_memhd --target hierarchical --topk K``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.deploy.base import DeployedArtifact, pytree_artifact
+from repro.deploy.padding import round_up
+from repro.deploy.registry import register_backend
+
+Array = jax.Array
+
+TILE = 128  # packed-slab column tile (the am_search_packed contract)
+
+
+# -- offline: clustering ------------------------------------------------------
+
+def default_groups(n_cols: int) -> int:
+    """G ~ 1.4*sqrt(C): sqrt balances G coarse scores against C/G fine
+    columns per cluster; the 1.4x over-partitions the index (the
+    standard IVF trick) so K-means prefers splitting natural clusters
+    (benign: each shard's super still matches its prototype) over
+    merging them (fatal for recall: a blended super ranks low for both
+    constituent clusters' queries)."""
+    return max(1, min(n_cols, int(round(1.4 * float(np.sqrt(n_cols))))))
+
+
+def balance_cap(n_cols: int, n_groups: int) -> int:
+    """Per-cluster member cap: the mean cluster size plus TILE/4 slack,
+    rounded up to a whole number of tiles. The tile rounding keeps the
+    ``max_tiles`` budget minimal — the sparse gather's width (and so
+    its cost) is ``S * max_tiles`` tiles, so one oversized cluster
+    taxes EVERY query. The slack keeps total capacity comfortably above
+    C: with capacity == C exactly, balancing degenerates into a forced
+    uniform partition, and every member spilled out of a coherent
+    natural cluster lands in a FOREIGN cluster whose super never ranks
+    for that member's queries — an unfixable recall hole. The 1.25x
+    proportional slack lets an unsplit natural cluster (up to ~1.25x
+    the mean under over-partitioned G) stay whole."""
+    mean = -(-n_cols // max(n_groups, 1))
+    return round_up(max(mean, 1) + mean // 4 + TILE // 4, TILE)
+
+
+def _kmeanspp_seeds(rng: np.random.Generator, x: np.ndarray,
+                    g: int) -> np.ndarray:
+    """Classic D^2-weighted k-means++ seeding on L2-normalized rows.
+
+    Bipolar rows all share one norm, so dot-sim K-means is spherical
+    K-means and squared distance is an affine map of the dot
+    similarity. Seeding matters here: random-row init loses ~1/e of
+    well-separated clusters to seed collisions, and every lost cluster
+    is a recall hole the shortlist can never see past.
+    """
+    xn = x / np.maximum(np.linalg.norm(x, axis=1, keepdims=True), 1e-8)
+    seeds = np.empty(g, np.int64)
+    seeds[0] = rng.integers(x.shape[0])
+    d2 = np.maximum(2.0 - 2.0 * (xn @ xn[seeds[0]]), 0.0)
+    for j in range(1, g):
+        total = d2.sum()
+        if total <= 0:  # fewer distinct rows than seeds: reuse any row
+            seeds[j:] = rng.integers(x.shape[0], size=g - j)
+            break
+        seeds[j] = rng.choice(x.shape[0], p=d2 / total)
+        d2 = np.minimum(d2, np.maximum(2.0 - 2.0 * (xn @ xn[seeds[j]]),
+                                       0.0))
+    return seeds
+
+
+def _balance_assignment(sims: np.ndarray, assign: np.ndarray,
+                        cap: int) -> np.ndarray:
+    """Cap every cluster at ``cap`` members.
+
+    Overflowing clusters keep their ``cap`` most-similar members; the
+    spilled tail re-homes to each member's next-best cluster with room
+    (by coarse similarity, deterministic). Total capacity
+    ``G * cap >= C`` by construction of ``balance_cap``, so every spill
+    finds a home.
+    """
+    g = sims.shape[1]
+    assign = assign.astype(np.int64).copy()
+    counts = np.bincount(assign, minlength=g)
+    for grp in np.nonzero(counts > cap)[0]:
+        members = np.nonzero(assign == grp)[0]
+        keep = np.argsort(-sims[members, grp], kind="stable")
+        for i in members[keep[cap:]]:
+            for alt in np.argsort(-sims[i], kind="stable"):
+                if alt != grp and counts[alt] < cap:
+                    assign[i] = alt
+                    counts[alt] += 1
+                    counts[grp] -= 1
+                    break
+    return assign
+
+
+def cluster_am(key: Array, binary_am, n_groups: int, *,
+               n_iters: int = 8, sample: Optional[int] = None,
+               chunk: int = 16384, refine_iters: int = 2,
+               balance: bool = True) -> tuple[Array, Array]:
+    """Cluster the trained AM's centroids into G super-centroids.
+
+    binary_am: (C, D) bipolar centroid rows (any float/int dtype).
+    Lloyd iterations run on at most ``sample`` rows (subsampling keeps
+    the fit cheap at C ~ 1e5); the final assignment is one full
+    dot-similarity pass over all C rows, chunked so the float copy of a
+    huge AM never materializes at once. With ``balance`` (default) the
+    assignment is capacity-capped at ``balance_cap`` members per
+    cluster, bounding the slab's ``max_tiles`` (one runaway cluster
+    would widen the per-query sparse gather for every query); the
+    majority-vote super-centroids are computed AFTER balancing so they
+    describe the clusters actually laid out.
+
+    Returns (super_binary, assignment): (G, D) float32 bipolar
+    majority-vote super-centroids and (C,) int32 cluster per centroid.
+    """
+    from repro.core import kmeans
+
+    c = binary_am.shape[0]
+    if not 1 <= n_groups <= c:
+        raise ValueError(f"n_groups={n_groups} outside [1, {c}]")
+    k_sub, k_fit = jax.random.split(key)
+    if sample is not None and sample < c:
+        rows = jax.random.choice(k_sub, c, (sample,), replace=False)
+        fit = jnp.asarray(np.asarray(binary_am)[np.asarray(rows)],
+                          jnp.float32)
+    else:
+        fit = jnp.asarray(binary_am, jnp.float32)
+    fit_np = np.asarray(fit)
+    seed_rng = np.random.default_rng(
+        int(jax.random.randint(k_fit, (), 0, 2**31 - 1)))
+    seeds = _kmeanspp_seeds(seed_rng, fit_np, n_groups)
+    cents, _ = kmeans.kmeans_dot(k_fit, fit, n_groups, n_iters,
+                                 init=fit[seeds])
+    cents_n = kmeans._l2_normalize(cents)
+
+    # Full-set Lloyd refinement: a subsampled fit merges/misses thin
+    # clusters once C >> sample, which costs shortlist recall directly
+    # (a query whose centroid sits in a mis-clustered group never sees
+    # it). A couple of assign/update passes over ALL rows — still
+    # chunked — polish the centroids before the assignment freezes.
+    for _ in range(max(refine_iters, 0)):
+        sums = jnp.zeros((n_groups, binary_am.shape[1]), jnp.float32)
+        cnts = jnp.zeros((n_groups,), jnp.float32)
+        for i in range(0, c, chunk):
+            blk = jnp.asarray(np.asarray(binary_am[i:i + chunk]),
+                              jnp.float32)
+            a = kmeans.assign_dot(blk, cents_n).astype(jnp.int32)
+            sums = sums + jax.ops.segment_sum(blk, a,
+                                              num_segments=n_groups)
+            cnts = cnts + jax.ops.segment_sum(
+                jnp.ones(blk.shape[0], jnp.float32), a,
+                num_segments=n_groups)
+        cents_n = kmeans._l2_normalize(
+            jnp.where(cnts[:, None] > 0, sums, cents_n))
+
+    # Full-set assignment, chunked over C; keep the (C, G) coarse sims
+    # on the host — the balancer re-homes spilled members by them.
+    sims_parts = []
+    for i in range(0, c, chunk):
+        blk = jnp.asarray(np.asarray(binary_am[i:i + chunk]), jnp.float32)
+        sims_parts.append(np.asarray(blk @ cents_n.T))
+    sims = np.concatenate(sims_parts)
+    assignment = sims.argmax(axis=-1)
+    if balance and n_groups > 1:
+        assignment = _balance_assignment(sims, assignment,
+                                         balance_cap(c, n_groups))
+
+    # Per-cluster bit-majority on the FINAL assignment, chunked.
+    sums = jnp.zeros((n_groups, binary_am.shape[1]), jnp.float32)
+    for i in range(0, c, chunk):
+        blk = jnp.asarray(np.asarray(binary_am[i:i + chunk]), jnp.float32)
+        a = jnp.asarray(assignment[i:i + chunk].astype(np.int32))
+        sums = sums + jax.ops.segment_sum(blk, a, num_segments=n_groups)
+    super_binary = jnp.where(sums >= 0, 1.0, -1.0).astype(jnp.float32)
+    return super_binary, jnp.asarray(assignment.astype(np.int32))
+
+
+# -- offline: cluster-contiguous slab layout ----------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ClusterLayout:
+    """Cluster-contiguous permutation of the packed AM (host arrays).
+
+    slab: (Dp, Ctot) uint8 — packed columns permuted so cluster g
+      occupies tiles [tile_start[g], tile_start[g] + tile_count[g]);
+      each cluster zero-padded to a whole number of 128-column tiles;
+      the LAST tile is the all-invalid null tile.
+    col_ids: (Ctot,) int32 — original centroid id of each slab column,
+      -1 for padding / null-tile columns.
+    """
+    slab: np.ndarray
+    col_ids: np.ndarray
+    tile_start: np.ndarray  # (G,) int32
+    tile_count: np.ndarray  # (G,) int32
+    max_tiles: int          # static gather width: max(tile_count)
+
+    @property
+    def n_tiles(self) -> int:
+        return self.slab.shape[1] // TILE
+
+    @property
+    def null_tile(self) -> int:
+        return self.n_tiles - 1
+
+
+def build_layout(am_packed_t, assignment, n_groups: int) -> ClusterLayout:
+    """Permute the packed AM into the cluster-contiguous tile slab.
+
+    am_packed_t: (Dp, C) uint8 packed AM (``pack_am``); assignment:
+    (C,) cluster id per centroid in [0, n_groups). Pure host-side
+    numpy — runs once at deploy time.
+    """
+    apt = np.asarray(am_packed_t)
+    assign = np.asarray(assignment, np.int64)
+    c = assign.shape[0]
+    if apt.shape[1] != c:
+        raise ValueError(f"AM has {apt.shape[1]} columns, "
+                         f"assignment covers {c}")
+    if c and not (0 <= assign.min() and assign.max() < n_groups):
+        raise ValueError("assignment out of range")
+
+    # Permutation: sort centroids by (cluster, original id) — stable
+    # within a cluster so the original scan order survives.
+    order = np.lexsort((np.arange(c), assign))
+    sizes = np.bincount(assign, minlength=n_groups)
+    tile_count = np.array([round_up(int(s), TILE) // TILE for s in sizes],
+                          np.int32)
+    tile_start = np.concatenate(
+        [[0], np.cumsum(tile_count)[:-1]]).astype(np.int32)
+    n_tiles = int(tile_count.sum()) + 1  # + trailing null tile
+    total = n_tiles * TILE
+
+    col_ids = np.full(total, -1, np.int32)
+    csum = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+    offset = np.arange(c) - np.repeat(csum, sizes)
+    dest = tile_start[assign[order]].astype(np.int64) * TILE + offset
+    col_ids[dest] = order
+
+    slab = np.zeros((apt.shape[0], total), np.uint8)
+    slab[:, dest] = apt[:, order]
+    max_tiles = int(tile_count.max()) if n_groups else 1
+    return ClusterLayout(slab=slab, col_ids=col_ids,
+                         tile_start=tile_start, tile_count=tile_count,
+                         max_tiles=max_tiles)
+
+
+def pack_rows_np(x) -> np.ndarray:
+    """Host-side ``pack_rows``: (N, D) bipolar -> (N, ceil(D/8)) uint8.
+
+    Same LSB-first layout and zero tail bits as ``kernels.pack_rows``;
+    numpy so huge AMs pack without a float32 device copy.
+    """
+    bits = np.asarray(x) > 0
+    return np.packbits(bits, axis=-1, bitorder="little")
+
+
+# -- the artifact -------------------------------------------------------------
+
+@pytree_artifact
+@dataclasses.dataclass
+class HierarchicalMemhd(DeployedArtifact):
+    """Frozen coarse-to-fine serving artifact (immutable pytree)."""
+
+    enc_params: Dict[str, Array]
+    super_packed_t: Array   # (Dp, G) uint8 packed super-centroids
+    am_slab_t: Array        # (Dp, Ctot) uint8 cluster-contiguous slab
+    col_ids: Array          # (Ctot,) int32 original id per slab column
+    tile_start: Array       # (G,) int32
+    tile_count: Array       # (G,) int32
+    centroid_class: Array   # (C,) int32
+    enc_cfg: "EncoderConfig"   # noqa: F821 — aux config
+    am_cfg: "MemhdConfig"      # noqa: F821 — aux config
+    groups: int = 1            # G
+    shortlist: int = 1         # S; S == G is the exact configuration
+    max_tiles: int = 1         # static per-cluster gather width
+
+    _leaf_fields: ClassVar[Tuple[str, ...]] = (
+        "enc_params", "super_packed_t", "am_slab_t", "col_ids",
+        "tile_start", "tile_count", "centroid_class")
+    _static_fields: ClassVar[Tuple[str, ...]] = (
+        "enc_cfg", "am_cfg", "groups", "shortlist", "max_tiles")
+
+    # -- inference -------------------------------------------------------------
+    def search_query(self, q: Array, k: int = 1) -> tuple[Array, Array]:
+        """(B, D) bipolar queries -> ((B, k) centroid ids, (B, k) sims).
+
+        The two-stage pipeline: pack, shortlist S clusters against the
+        super-AM, sparse-search their tiles with the streaming top-k
+        epilogue. Ids are ORIGINAL centroid indices (pre-permutation).
+        """
+        from repro.kernels import ops
+        qp = ops.pack_rows(q)
+        short, _ = ops.am_shortlist(qp, self.super_packed_t,
+                                    n_dims=self.am_cfg.dim,
+                                    s=self.shortlist)
+        return ops.am_search_sparse(
+            qp, self.am_slab_t, self.col_ids, short, self.tile_start,
+            self.tile_count, n_dims=self.am_cfg.dim, k=k,
+            max_tiles=self.max_tiles)
+
+    def predict_query(self, q: Array) -> Array:
+        """(B, D) bipolar queries -> (B,) predicted class."""
+        idx, _ = self.search_query(q, k=1)
+        return self.centroid_class[jnp.maximum(idx[:, 0], 0)]
+
+    def topk_query(self, q: Array, k: int) -> tuple[Array, Array, Array]:
+        """(B, D) queries -> ((B, k) classes, (B, k) ids, (B, k) sims).
+
+        Exhausted slots (fewer than k candidates in the shortlisted
+        clusters) carry class -1 / id -1.
+        """
+        idx, sims = self.search_query(q, k=k)
+        cls = jnp.where(idx >= 0,
+                        self.centroid_class[jnp.maximum(idx, 0)], -1)
+        return cls, idx, sims
+
+    def predict_topk(self, feats: Array, k: int) -> tuple[Array, Array, Array]:
+        """(B, f) raw features -> top-k (classes, centroid ids, sims)."""
+        from repro.core import encoding
+        q = encoding.encode_query(self.enc_params, self.enc_cfg, feats)
+        return self.topk_query(q, k)
+
+    # -- reporting / accounting ------------------------------------------------
+    @property
+    def backend(self) -> str:
+        return "hierarchical"
+
+    @property
+    def serving_mode(self) -> str:
+        return f"coarse2fine-g{self.groups}-s{self.shortlist}"
+
+    @property
+    def resident_bytes(self) -> int:
+        # Super-AM + permuted slab, both uint8; layout index vectors are
+        # negligible but real residents, so they count too.
+        return int(self.super_packed_t.size + self.am_slab_t.size
+                   + self.col_ids.size * 4
+                   + self.tile_start.size * 4 + self.tile_count.size * 4)
+
+
+# -- registry factory ---------------------------------------------------------
+
+def build_search_state(key: Array, binary_am, n_groups: int, *,
+                       kmeans_iters: int = 8,
+                       kmeans_sample: Optional[int] = 16384):
+    """Cluster + pack + lay out a bare (C, D) binary AM.
+
+    The offline half of the backend, exposed separately so benchmarks
+    and tests can drive the two kernels without a trained model.
+    Returns (super_packed_t, layout): (Dp, G) uint8 jnp array and the
+    host-side ``ClusterLayout``.
+    """
+    super_binary, assignment = cluster_am(
+        key, binary_am, n_groups, n_iters=kmeans_iters,
+        sample=kmeans_sample)
+    layout = build_layout(pack_rows_np(binary_am).T,
+                          np.asarray(assignment), n_groups)
+    return jnp.asarray(pack_rows_np(np.asarray(super_binary)).T), layout
+
+
+@register_backend("hierarchical")
+def deploy_hierarchical(model, *, groups: Optional[int] = None,
+                        shortlist: Optional[int] = None,
+                        kmeans_iters: int = 8,
+                        kmeans_sample: Optional[int] = 16384,
+                        seed: int = 0) -> HierarchicalMemhd:
+    """Cluster the trained AM and freeze the coarse-to-fine artifact.
+
+    groups: G super-centroids (default ~1.4*sqrt(C)); shortlist: S
+    clusters
+    searched per query (default G — the exact configuration, bit-exact
+    with the flat scan; lower S for sublinear cost); kmeans_sample:
+    Lloyd fits on at most this many centroids (full assignment always).
+    """
+    from repro.core import am as am_lib
+
+    binary = model.am_state["binary"]
+    c = int(binary.shape[0])
+    g = default_groups(c) if groups is None else int(groups)
+    s = g if shortlist is None else int(shortlist)
+    if not 1 <= s <= g:
+        raise ValueError(f"shortlist={s} outside [1, groups={g}]")
+
+    key = jax.random.PRNGKey(seed)
+    super_binary, assignment = cluster_am(
+        key, binary, g, n_iters=kmeans_iters, sample=kmeans_sample)
+    layout = build_layout(np.asarray(am_lib.pack_am(binary)),
+                          np.asarray(assignment), g)
+    super_binary = np.asarray(super_binary)
+
+    return HierarchicalMemhd(
+        enc_params=model.enc_params,
+        super_packed_t=jnp.asarray(pack_rows_np(super_binary).T),
+        am_slab_t=jnp.asarray(layout.slab),
+        col_ids=jnp.asarray(layout.col_ids),
+        tile_start=jnp.asarray(layout.tile_start),
+        tile_count=jnp.asarray(layout.tile_count),
+        centroid_class=model.am_state["centroid_class"],
+        enc_cfg=model.enc_cfg, am_cfg=model.am_cfg,
+        groups=g, shortlist=s, max_tiles=layout.max_tiles,
+    )

@@ -76,24 +76,23 @@ class ShardedArtifact:
         return getattr(self.artifact, name)
 
     # -- sharded dispatch ------------------------------------------------------
-    def _sharded_fn(self, method: str):
-        fn = self._fns.get(method)
+    def _sharded_fn(self, key: str, local):
+        """The jitted shard_map of ``local(artifact, rows)``, cached
+        under ``key`` (the method name, plus any static args — e.g. the
+        top-k width — that the local closure bakes in)."""
+        fn = self._fns.get(key)
         if fn is None:
             axis = self.mesh.axis_names[0]
-
-            def local(art, x):
-                return getattr(art, method)(x)
-
             # check_rep=False: the per-shard body calls Pallas kernels,
             # which have no shard_map replication rule.
             fn = jax.jit(_shard_map(
                 local, mesh=self.mesh,
                 in_specs=(P(), P(axis)), out_specs=P(axis),
                 check_rep=False))
-            self._fns[method] = fn
+            self._fns[key] = fn
         return fn
 
-    def _call(self, method: str, feats) -> Array:
+    def _call(self, key: str, local, feats):
         if not hasattr(feats, "shape"):
             feats = np.asarray(feats, np.float32)
         n = int(feats.shape[0])
@@ -101,18 +100,42 @@ class ShardedArtifact:
         # pad_rows is namespace-agnostic: numpy batches pad on the host
         # (off the device queue), device-resident batches stay on device
         # with async dispatch — no forced device->host round-trip.
-        out = self._sharded_fn(method)(self.artifact, pad_rows(feats, m))
-        return out[:n]
+        out = self._sharded_fn(key, local)(self.artifact,
+                                           pad_rows(feats, m))
+        # Outputs are row-sharded pytrees (predict: one array; topk: a
+        # (classes, ids, sims) triple) — drop the padded tail rows.
+        return jax.tree.map(lambda o: o[:n], out)
+
+    def _method_local(self, method: str):
+        def local(art, x):
+            return getattr(art, method)(x)
+        return local
 
     # -- protocol surface ------------------------------------------------------
     def predict(self, feats) -> Array:
-        return self._call("predict", feats)
+        return self._call("predict", self._method_local("predict"), feats)
 
     def predict_features(self, feats) -> Array:
-        return self._call("predict_features", feats)
+        return self._call("predict_features",
+                          self._method_local("predict_features"), feats)
 
     def predict_query(self, q) -> Array:
-        return self._call("predict_query", q)
+        return self._call("predict_query",
+                          self._method_local("predict_query"), q)
+
+    def predict_topk(self, feats, k: int):
+        """Sharded top-k serving (backends exposing ``predict_topk``).
+
+        Returns the wrapped artifact's ((B, k) classes, (B, k) centroid
+        ids, (B, k) sims) triple, rows sharded over the mesh — bit-exact
+        with the single-device call.
+        """
+        k = int(k)
+
+        def local(art, x):
+            return art.predict_topk(x, k)
+
+        return self._call(f"predict_topk:{k}", local, feats)
 
     def score(self, feats, labels, batch: int = 4096) -> float:
         from repro.core import evaluate as eval_lib

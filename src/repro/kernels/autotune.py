@@ -1,7 +1,9 @@
-"""Search-over-tilings autotuner for the three MEMHD hot-path kernels.
+"""Search-over-tilings autotuner for the MEMHD hot-path kernels.
 
-``am_search_packed``, ``encode_pack`` (the fused encoder) and
-``qail_update`` all ship with a fixed batch-tile height (``block_b``)
+``am_search_packed``, ``encode_pack`` (the fused encoder),
+``qail_update``, and the two hierarchical-search kernels
+(``am_shortlist``, ``am_search_sparse``) ship with a fixed
+batch-tile height (``block_b``)
 chosen for the paper's flagship 128x128 geometry. The lane/sublane tile
 (``TILE = 128``) is NOT searchable — it IS the IMC-array contract
 (kernel grid == ``repro.core.imc`` cycle count, asserted in tests) —
@@ -54,6 +56,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import am_search_packed as _asp
+from repro.kernels import am_search_sparse as _ass
+from repro.kernels import am_shortlist as _shl
 from repro.kernels import encode_fused as _ef
 from repro.kernels import qail_update as _qu
 from repro.kernels import ref
@@ -133,6 +137,49 @@ def _qu_vmem(bb, dims):
     return 2 * bb * d * 4 + d * c * 4 + c * d * 4 + 2 * bb * c * 4
 
 
+def _shl_inputs(rng, batch, dims):
+    d, g, s = dims["D"], dims["G"], dims["S"]
+    q = jnp.asarray(rng.choice([-1.0, 1.0], size=(batch, d))
+                    .astype(np.float32))
+    am = jnp.asarray(rng.choice([-1.0, 1.0], size=(g, d))
+                     .astype(np.float32))
+    return ref.pack_rows(q), ref.pack_rows(am).T, d, s
+
+
+def _shl_vmem(bb, dims):
+    # XOR broadcast + accumulator + the (bb, S + TILE) top-S merge pair.
+    s = dims["S"]
+    return (bb * TILE_P * TILE * 4 + bb * TILE * 4
+            + 2 * bb * (s + TILE) * 8)
+
+
+def _ass_inputs(rng, batch, dims):
+    # Tunes the Pallas half (the gathered-tiles scan): inputs mimic the
+    # XLA gather's output — per-query tile slabs with unique original
+    # ids and an invalid (id -1) padding run, shared across the batch.
+    d, t, k = dims["D"], dims["T"], dims["K"]
+    tc = t * TILE
+    cols = jnp.asarray(rng.choice([-1.0, 1.0], size=(tc, d))
+                       .astype(np.float32))
+    q = jnp.asarray(rng.choice([-1.0, 1.0], size=(batch, d))
+                    .astype(np.float32))
+    ids = rng.permutation(4 * tc)[:tc].astype(np.int32)
+    ids[tc - TILE // 2:] = -1
+    qp = ref.pack_rows(q)
+    tiles = jnp.broadcast_to(ref.pack_rows(cols).T[None, :, :],
+                             (batch, qp.shape[1], tc))
+    ids_b = jnp.broadcast_to(jnp.asarray(ids)[None, :], (batch, tc))
+    return qp, tiles, ids_b, d, k
+
+
+def _ass_vmem(bb, dims):
+    # Per-query uint8 tile block + its int32 XOR broadcast + accumulator
+    # + the (bb, K + TILE) top-k merge pair.
+    k = dims["K"]
+    return (bb * TILE_P * TILE * 5 + bb * TILE * 4
+            + 2 * bb * (k + TILE) * 8)
+
+
 KERNELS: Dict[str, KernelSpec] = {
     "am_search_packed": KernelSpec(
         name="am_search_packed",
@@ -144,6 +191,29 @@ KERNELS: Dict[str, KernelSpec] = {
             qp, apt, n_dims=d, block_b=bb),
         run_ref=lambda qp, apt, d: ref.am_search_packed(qp, apt, d),
         vmem_bytes=_asp_vmem,
+    ),
+    "am_shortlist": KernelSpec(
+        name="am_shortlist",
+        key_dims=("D", "G", "S"),
+        default_block_b=_shl.DEFAULT_BLOCK_B,
+        candidates=_shl.TUNE_BLOCK_B,
+        make_inputs=_shl_inputs,
+        run=lambda bb, qp, spt, d, s: _shl.am_shortlist(
+            qp, spt, n_dims=d, s=s, block_b=bb),
+        run_ref=lambda qp, spt, d, s: ref.am_shortlist(qp, spt, d, s),
+        vmem_bytes=_shl_vmem,
+    ),
+    "am_search_sparse": KernelSpec(
+        name="am_search_sparse",
+        key_dims=("D", "T", "K"),
+        default_block_b=_ass.DEFAULT_BLOCK_B,
+        candidates=_ass.TUNE_BLOCK_B,
+        make_inputs=_ass_inputs,
+        run=lambda bb, qp, tiles, ids, d, k: _ass.am_search_sparse_gathered(
+            qp, tiles, ids, n_dims=d, k=k, block_b=bb),
+        run_ref=lambda qp, tiles, ids, d, k: ref.am_search_sparse(
+            qp, tiles, ids, d, k),
+        vmem_bytes=_ass_vmem,
     ),
     "encode_pack": KernelSpec(
         name="encode_pack",
@@ -180,6 +250,15 @@ KERNELS: Dict[str, KernelSpec] = {
 # Paper geometries tuned by default (and shipped in the committed cache).
 DEFAULT_GEOMETRIES: Dict[str, Tuple[Dict[str, int], ...]] = {
     "am_search_packed": ({"D": 128, "C": 128}, {"D": 256, "C": 256}),
+    # Hierarchical search: one serving-scale geometry (the 128x128
+    # flagship model under the default G ~ 1.4*sqrt(C)) and one
+    # huge-label geometry matching the C=100k serving recommendation of
+    # the benchmarks/hierarchical_search.py sweep (G=448, S=8, balanced
+    # layout max_tiles=2 -> T = S*max_tiles = 16).
+    "am_shortlist": ({"D": 128, "G": 16, "S": 8},
+                     {"D": 1024, "G": 448, "S": 8}),
+    "am_search_sparse": ({"D": 128, "T": 8, "K": 1},
+                         {"D": 1024, "T": 16, "K": 1}),
     "encode_pack": ({"f": 784, "D": 128}, {"f": 617, "D": 512}),
     "qail_update": ({"D": 128, "C": 128}, {"D": 256, "C": 64}),
 }

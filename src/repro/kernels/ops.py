@@ -26,6 +26,15 @@ from repro.kernels.am_search_imc import imc_cycles_for as imc_search_cycles
 from repro.kernels.am_search_packed import am_search_packed as _am_search_packed
 from repro.kernels.am_search_packed import imc_cycles_for as packed_search_cycles
 from repro.kernels.am_search_packed import pack_rows as _pack_rows
+from repro.kernels.am_search_sparse import am_search_sparse as _am_search_sparse
+from repro.kernels.am_search_sparse import (
+    am_search_sparse_gathered as _am_search_sparse_gathered,
+)
+from repro.kernels.am_search_sparse import (
+    expand_shortlist_tiles as _expand_shortlist_tiles,
+)
+from repro.kernels.am_search_sparse import gather_shortlist as _gather_shortlist
+from repro.kernels.am_shortlist import am_shortlist as _am_shortlist
 from repro.kernels.binary_mvm import binary_mvm as _binary_mvm
 from repro.kernels.binary_mvm import imc_cycles_for as mvm_cycles
 from repro.kernels.encode_fused import encode_pack as _encode_pack
@@ -55,7 +64,8 @@ def tuned_block_b(kernel: str, block_b: int | None, **dims) -> int:
 
 __all__ = [
     "encode_mvm", "encode_pack", "am_search", "am_search_imc",
-    "am_search_packed", "search_from_features", "predict_from_features",
+    "am_search_packed", "am_shortlist", "am_search_sparse",
+    "search_from_features", "predict_from_features",
     "pack_bits", "unpack_bits", "pack_rows", "qail_update",
     "predict_classes", "predict_packed", "predict_imc",
     "search_cycles", "imc_search_cycles", "packed_search_cycles",
@@ -183,6 +193,67 @@ def am_search_packed(q_packed: Array, am_packed_t: Array, *, n_dims: int,
                        C=am_packed_t.shape[1])
     return _am_search_packed(q_packed, am_packed_t, n_dims=n_dims,
                              mode=mode, block_b=bb)
+
+
+def am_shortlist(q_packed: Array, super_packed_t: Array, *, n_dims: int,
+                 s: int, use_kernel: bool | None = None,
+                 block_b: int | None = None) -> tuple[Array, Array]:
+    """Coarse pass of the hierarchical search: top-``s`` clusters.
+
+    q_packed: (B, Dp) uint8 packed queries; super_packed_t: (Dp, G)
+    uint8 packed super-centroids. Returns ((B, s) cluster ids, (B, s)
+    super similarities), best-first, ties toward the lower cluster id —
+    bit-exact with ``ref.am_shortlist``. ``use_kernel=None`` (default)
+    auto-dispatches like ``am_search_sparse``: Pallas on TPU, the
+    bit-exact oracle elsewhere.
+    """
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if not use_kernel:
+        return ref.am_shortlist(q_packed, super_packed_t, n_dims, s)
+    bb = tuned_block_b("am_shortlist", block_b, D=n_dims,
+                       G=super_packed_t.shape[1], S=s)
+    return _am_shortlist(q_packed, super_packed_t, n_dims=n_dims, s=s,
+                         block_b=bb)
+
+
+def am_search_sparse(q_packed: Array, am_slab_t: Array, col_ids: Array,
+                     shortlist: Array, tile_start: Array,
+                     tile_count: Array, *, n_dims: int, k: int,
+                     max_tiles: int, use_kernel: bool | None = None,
+                     block_b: int | None = None) -> tuple[Array, Array]:
+    """Fine pass of the hierarchical search: shortlisted tiles + top-k.
+
+    am_slab_t/col_ids/tile_start/tile_count describe the permuted
+    cluster-contiguous slab (``deploy.hierarchical.build_layout``);
+    shortlist: (B, S) cluster ids from ``am_shortlist``. Returns
+    ((B, k) original centroid ids, (B, k) sims) ordered by (-sim, id);
+    exhausted slots are (-1, float32-min). Bit-exact with
+    ``ref.am_search_sparse`` on the gathered operands, and with S = G
+    the k=1 column reproduces ``am_search_packed`` bit-for-bit.
+
+    ``use_kernel=None`` (default) auto-dispatches: the Pallas kernel on
+    TPU, the bit-exact XLA gather+oracle path elsewhere. Unlike the
+    other kernels — whose inputs are shared across the grid — the
+    sparse kernel's gathered operand is per-query, so interpret-mode
+    emulation (which re-copies the full input every grid step) costs
+    O(steps x B*S*max_tiles) and is pathologically slow off-TPU; the
+    two paths are parity-tested bit-exact.
+    """
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if not use_kernel:
+        null_tile = am_slab_t.shape[1] // 128 - 1
+        tiles = _expand_shortlist_tiles(
+            shortlist, tile_start, tile_count,
+            max_tiles=max_tiles, null_tile=null_tile)
+        gathered, ids = _gather_shortlist(am_slab_t, col_ids, tiles)
+        return ref.am_search_sparse(q_packed, gathered, ids, n_dims, k)
+    bb = tuned_block_b("am_search_sparse", block_b, D=n_dims,
+                       T=shortlist.shape[1] * max_tiles, K=k)
+    return _am_search_sparse(q_packed, am_slab_t, col_ids, shortlist,
+                             tile_start, tile_count, n_dims=n_dims, k=k,
+                             max_tiles=max_tiles, block_b=bb)
 
 
 def pack_rows(x: Array, *, use_kernel: bool = True) -> Array:

@@ -98,6 +98,96 @@ def am_search_packed(q_packed: Array, am_packed_t: Array, n_dims: int,
     return best_idx, best_sim
 
 
+def _rank_by_sim_then_id(sims: Array, ids: Array) -> Array:
+    """Column order sorting each row by (-sim, id): best similarity
+    first, ties broken toward the LOWER id — exactly the flat kernel's
+    first-wins running compare when ids are the original scan order.
+
+    Implemented as a two-pass stable sort (sort by id, then stably by
+    -sim), which is the lexicographic (-sim, id) order.
+    """
+    id_order = jnp.argsort(ids, axis=-1, stable=True)
+    sims_by_id = jnp.take_along_axis(sims, id_order, axis=-1)
+    sim_order = jnp.argsort(-sims_by_id, axis=-1, stable=True)
+    return jnp.take_along_axis(id_order, sim_order, axis=-1)
+
+
+def am_shortlist(q_packed: Array, super_packed_t: Array, n_dims: int,
+                 s: int) -> tuple[Array, Array]:
+    """Coarse pass of the hierarchical search: top-``s`` clusters.
+
+    q_packed: (B, Dp) uint8 packed queries; super_packed_t: (Dp, G)
+    uint8 packed super-centroids (one column per cluster of the full
+    AM); n_dims: true D; s: shortlist length, 1 <= s <= G.
+
+    Returns (cluster_idx, cluster_sims): (B, s) int32 cluster ids and
+    (B, s) float32 super-centroid similarities, ordered best-first with
+    ties broken toward the lower cluster id.
+    """
+    ham = hamming_distances(q_packed, super_packed_t)  # (B, G)
+    sims = (n_dims - 2 * ham).astype(jnp.float32)
+    g = sims.shape[-1]
+    ids = jnp.broadcast_to(jnp.arange(g, dtype=jnp.int32), sims.shape)
+    order = _rank_by_sim_then_id(sims, ids)[:, :s]
+    return (order.astype(jnp.int32),
+            jnp.take_along_axis(sims, order, axis=-1))
+
+
+def am_search_topk(q_packed: Array, am_packed_t: Array, n_dims: int,
+                   k: int) -> tuple[Array, Array]:
+    """Exact flat top-k associative search (the recall reference).
+
+    Same operands as ``am_search_packed``; returns (idx, sims), each
+    (B, k), ordered by (-sim, centroid id). Row k=1 is bit-identical to
+    ``am_search_packed`` (first-wins tie == lowest-id tie).
+    """
+    ham = hamming_distances(q_packed, am_packed_t)  # (B, C)
+    sims = (n_dims - 2 * ham).astype(jnp.float32)
+    c = sims.shape[-1]
+    ids = jnp.broadcast_to(jnp.arange(c, dtype=jnp.int32), sims.shape)
+    order = _rank_by_sim_then_id(sims, ids)[:, :k]
+    return (order.astype(jnp.int32),
+            jnp.take_along_axis(sims, order, axis=-1))
+
+
+def am_search_sparse(q_packed: Array, tiles_packed: Array,
+                     tile_ids: Array, n_dims: int, k: int,
+                     ) -> tuple[Array, Array]:
+    """Fine pass of the hierarchical search, on pre-gathered tiles.
+
+    q_packed: (B, Dp) uint8 packed queries; tiles_packed: (B, Dp, T*128)
+    uint8 — each query's shortlisted AM tiles gathered side by side;
+    tile_ids: (B, T*128) int32 ORIGINAL centroid id per gathered column
+    (-1 for cluster-padding / null-tile columns).
+
+    Returns (idx, sims): (B, k) int32 original centroid ids and (B, k)
+    float32 similarities, ordered by (-sim, id); slots with no valid
+    candidate left emit id -1 and sim float32-min. Tie-breaking on the
+    ORIGINAL id makes the degenerate shortlist-everything configuration
+    bit-exact with the flat packed scan.
+    """
+    # Stay in uint8 until the reduce: the (B, Dp, TC) intermediate is
+    # the dominant cost of this path (it also serves as the CPU/GPU
+    # serving path via ops' auto-dispatch, not just the test oracle),
+    # and hardware popcount on uint8 is bit-identical to the SWAR form.
+    x = jax.lax.bitwise_xor(q_packed[:, :, None], tiles_packed)
+    ham = jnp.sum(jnp.bitwise_count(x), axis=1, dtype=jnp.int32)  # (B, TC)
+    neg = jnp.finfo(jnp.float32).min
+    valid = tile_ids >= 0
+    sims = jnp.where(valid, (n_dims - 2 * ham).astype(jnp.float32), neg)
+    sent = jnp.iinfo(jnp.int32).max
+    ids = jnp.where(valid, tile_ids, sent)
+    order = _rank_by_sim_then_id(sims, ids)[:, :k]
+    top_sims = jnp.take_along_axis(sims, order, axis=-1)
+    top_ids = jnp.take_along_axis(tile_ids, order, axis=-1)
+    idx = jnp.where(top_sims > neg, top_ids, -1).astype(jnp.int32)
+    if idx.shape[-1] < k:  # k > candidate columns: pad exhausted slots
+        pad = ((0, 0), (0, k - idx.shape[-1]))
+        idx = jnp.pad(idx, pad, constant_values=-1)
+        top_sims = jnp.pad(top_sims, pad, constant_values=neg)
+    return idx, top_sims
+
+
 def encode_pack(feats: Array, projection: Array) -> Array:
     """Staged feature->packed-query chain: the ``encode_fused`` oracle.
 

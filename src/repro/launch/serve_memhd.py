@@ -89,7 +89,7 @@ def make_batches(requests: Sequence[Request], max_batch: int,
 def serve_batches(deployed, requests: Sequence[Request],
                   max_batch: int = 256, tile: int = TILE_B,
                   warmup: bool = True, fused: bool = False,
-                  depth: int = 1,
+                  depth: int = 1, topk: int = 0,
                   ) -> Tuple[Dict[int, np.ndarray], Dict]:
     """Run the request stream through the deployed model.
 
@@ -109,14 +109,28 @@ def serve_batches(deployed, requests: Sequence[Request],
     dispatch -> result ready and so INCLUDES pipeline queue wait; the
     ``depth`` stat field tags every report with which semantics apply.
 
+    ``topk >= 1`` serves through the backend's ``predict_topk`` — the
+    fused streaming top-k kernel epilogue — and each response row widens
+    to the request's k best classes.
+
     Returns (responses, stats): responses maps rid -> (n,) predicted
-    classes; stats holds per-batch latencies and padding accounting.
+    classes ((n, topk) when ``topk >= 1``); stats holds per-batch
+    latencies and padding accounting.
     """
     if depth < 1:
         raise ValueError(f"depth must be >= 1, got {depth}")
+    if topk and fused:
+        raise ValueError("topk serving and the fused feature pipeline "
+                         "are mutually exclusive")
     # Sharded artifacts need every batch to split evenly across devices.
     tile = math.lcm(tile, getattr(deployed, "row_multiple", 1))
-    predict = (deployed.predict_features if fused else deployed.predict)
+    if topk:
+        # (B, k) classes out of the streaming top-k epilogue; the ids
+        # and sims of the triple stay available via predict_topk itself.
+        predict = lambda x: deployed.predict_topk(x, topk)[0]  # noqa: E731
+    else:
+        predict = (deployed.predict_features if fused
+                   else deployed.predict)
     batches = make_batches(requests, max_batch)
     if warmup:
         n_feats = requests[0].feats.shape[1] if requests else 0
@@ -181,7 +195,8 @@ def synthetic_requests(feats: np.ndarray, n_requests: int,
 
 
 def build_report(deployed, requests: Sequence[Request], stats: Dict,
-                 wall_s: float, fused: bool = False) -> Dict:
+                 wall_s: float, fused: bool = False, topk: int = 0,
+                 ) -> Dict:
     """Assemble the serving JSON report — the driver's output contract.
 
     Key set and value types are stable (asserted in
@@ -200,6 +215,7 @@ def build_report(deployed, requests: Sequence[Request], stats: Dict,
         "packed": bool(getattr(deployed, "packed", False)),
         "mode": deployed.serving_mode,
         "pipeline": "fused" if fused else "staged",
+        "topk": int(topk),  # 0 = argmax serving; k >= 1 = top-k epilogue
         "geometry": f"{deployed.am_cfg.dim}x{deployed.am_cfg.columns}",
         "requests": len(requests),
         "rows": n_rows,
@@ -222,10 +238,20 @@ def main():
                     help="max rows per request")
     ap.add_argument("--max-batch", type=int, default=256)
     ap.add_argument("--target", default=None,
-                    choices=["packed", "unpacked", "imc"],
+                    choices=["packed", "unpacked", "imc", "hierarchical"],
                     help="deployment backend (registry target)")
     ap.add_argument("--mode", default="popcount",
                     choices=["popcount", "unpack"])
+    ap.add_argument("--topk", type=int, default=0,
+                    help="serve k candidates per row through the fused "
+                         "streaming top-k epilogue (hierarchical "
+                         "backend); 0 = argmax serving")
+    ap.add_argument("--groups", type=int, default=None,
+                    help="hierarchical: G super-centroids "
+                         "(default ~sqrt(C))")
+    ap.add_argument("--shortlist", type=int, default=None,
+                    help="hierarchical: S clusters searched per query "
+                         "(default G — exact)")
     ap.add_argument("--unpacked", action="store_true",
                     help="legacy alias for --target unpacked")
     ap.add_argument("--fused", action="store_true",
@@ -248,6 +274,12 @@ def main():
     target = args.target or ("unpacked" if args.unpacked else "packed")
     if args.fused and target != "packed":
         ap.error("--fused needs the packed backend (--target packed)")
+    if args.topk and target != "hierarchical":
+        ap.error("--topk needs the top-k backend "
+                 "(--target hierarchical)")
+    if (args.groups or args.shortlist) and target != "hierarchical":
+        ap.error("--groups/--shortlist only apply to "
+                 "--target hierarchical")
 
     from repro.core import EncoderConfig, MemhdConfig, MemhdModel
     from repro.data import load_dataset
@@ -264,6 +296,9 @@ def main():
     model, _ = model.fit(jax.random.key(1), ds.train_x, ds.train_y)
     if target in ("packed", "unpacked"):
         deployed = model.deploy(target=target, mode=args.mode)
+    elif target == "hierarchical":
+        deployed = model.deploy(target=target, groups=args.groups,
+                                shortlist=args.shortlist)
     else:
         deployed = model.deploy(target=target)
     if args.devices > 1:
@@ -275,13 +310,14 @@ def main():
     # Warmup pass compiles every padded batch shape; the timed pass then
     # measures pure serving.
     serve_batches(deployed, reqs, args.max_batch, fused=args.fused,
-                  depth=args.depth)
+                  depth=args.depth, topk=args.topk)
     t0 = time.time()
     responses, stats = serve_batches(deployed, reqs, args.max_batch,
                                      warmup=False, fused=args.fused,
-                                     depth=args.depth)
+                                     depth=args.depth, topk=args.topk)
     wall = time.time() - t0
-    report = build_report(deployed, reqs, stats, wall, fused=args.fused)
+    report = build_report(deployed, reqs, stats, wall, fused=args.fused,
+                          topk=args.topk)
     print(json.dumps(report, indent=1))
     assert len(responses) == len(reqs)
     if args.record_dir:

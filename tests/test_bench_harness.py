@@ -1,7 +1,8 @@
 """Perf-trajectory harness: frozen BENCH_*.json schema, regression-gate
 behavior on synthetic baselines, run.py --only/--fast selection semantics
-(subprocess), and the kernel-autotune cache round-trip + tuned-vs-default
-bit-exactness for all three tunable kernels."""
+(subprocess), benchmarks/*.py registration completeness, and the
+kernel-autotune cache round-trip + tuned-vs-default bit-exactness for
+all five tunable kernels."""
 import json
 import os
 import subprocess
@@ -279,9 +280,39 @@ class TestRunSelection:
 # Smallest geometries the kernels are contracted for (D one lane tile).
 SMALL_DIMS = {
     "am_search_packed": {"D": 128, "C": 32},
+    "am_shortlist": {"D": 128, "G": 32, "S": 4},
+    "am_search_sparse": {"D": 128, "T": 2, "K": 3},
     "encode_pack": {"f": 40, "D": 128},
     "qail_update": {"D": 128, "C": 32},
 }
+
+
+class TestBenchRegistration:
+    """Every benchmarks/*.py module is registered in run.py BENCHES (or
+    is explicitly harness infrastructure) — pins the orphan-bench class
+    of bug (hillclimb shipped unreachable from the orchestrator)."""
+
+    # Harness plumbing, not benches: never registered.
+    EXEMPT = {"run", "common", "record", "gate", "__init__"}
+
+    def test_every_bench_module_is_registered(self):
+        from benchmarks.run import BENCHES
+        bench_dir = os.path.join(REPO_ROOT, "benchmarks")
+        modules = {os.path.splitext(f)[0] for f in os.listdir(bench_dir)
+                   if f.endswith(".py")}
+        registered = {mod.rsplit(".", 1)[-1] for _, mod in BENCHES}
+        unregistered = modules - registered - self.EXEMPT
+        assert not unregistered, (
+            f"benchmarks modules not registered in run.py BENCHES and "
+            f"not in the EXEMPT harness set: {sorted(unregistered)}")
+        # And the registry never points at a module that doesn't exist.
+        assert registered <= modules
+
+    def test_registered_names_are_unique(self):
+        from benchmarks.run import BENCHES, FAST
+        names = [n for n, _ in BENCHES]
+        assert len(names) == len(set(names))
+        assert FAST <= set(names)
 
 
 class TestAutotune:

@@ -130,6 +130,49 @@ class TestKernelOracleParity:
         np.testing.assert_array_equal(np.asarray(gm), np.asarray(wm))
         del f
 
+    def test_am_shortlist(self, b, f, d, c):
+        # The AM rows play the G super-centroids; sweep S from 1 to
+        # the full (ragged) column count.
+        rng = geom_rng(b, d, c, 6)
+        q, supers = bipolar(rng, (b, d)), bipolar(rng, (c, d))
+        qp = ops.pack_rows(q)
+        spt = ops.pack_rows(supers).T
+        for s in sorted({1, min(3, c), c}):
+            gi, gs = ops.am_shortlist(qp, spt, n_dims=d, s=s,
+                                      use_kernel=True)
+            wi, ws = ref.am_shortlist(qp, spt, d, s)
+            np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+            np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+        del f
+
+    def test_am_search_sparse(self, b, f, d, c):
+        # Random cluster layout over the ragged C; kernel path vs the
+        # gather + ref-oracle path, including k > candidate count.
+        from repro.deploy import hierarchical as hier
+        rng = geom_rng(b, d, c, 7)
+        g = max(1, c // 3)
+        q, am = bipolar(rng, (b, d)), bipolar(rng, (c, d))
+        qp = ops.pack_rows(q)
+        apt = np.asarray(ops.pack_rows(am).T)
+        assign = rng.integers(0, g, size=c).astype(np.int32)
+        layout = hier.build_layout(apt, assign, g)
+        slab = jnp.asarray(layout.slab)
+        col_ids = jnp.asarray(layout.col_ids)
+        t_start = jnp.asarray(layout.tile_start)
+        t_count = jnp.asarray(layout.tile_count)
+        s = min(2, g)
+        short = jnp.asarray(
+            np.stack([rng.permutation(g)[:s] for _ in range(b)])
+            .astype(np.int32))
+        for k in (1, min(3, c), c + 2):  # c + 2: exhausted slots
+            args = (qp, slab, col_ids, short, t_start, t_count)
+            kw = dict(n_dims=d, k=k, max_tiles=layout.max_tiles)
+            gi, gs = ops.am_search_sparse(*args, use_kernel=True, **kw)
+            wi, ws = ops.am_search_sparse(*args, use_kernel=False, **kw)
+            np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+            np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+        del f
+
     def test_encode_fused(self, b, f, d, c):
         rng = geom_rng(b, f, d, 4)
         x, w = feats_mat(rng, b, f), bipolar(rng, (f, d))
@@ -229,6 +272,127 @@ class TestEncoderChunkInvariance:
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+class TestHierarchicalSemantics:
+    """Coarse-to-fine corners the differential sweep can't pin: explicit
+    tie-breaking on duplicated columns, the planted-cluster recall
+    property, and the degenerate S = G bit-exactness contract."""
+
+    def test_shortlist_ties_break_to_lower_id(self):
+        rng = geom_rng(40)
+        base = bipolar(rng, (4, 128))
+        # Duplicate every super-centroid: ids 0..3 == ids 4..7.
+        supers = jnp.concatenate([base, base], axis=0)
+        q = bipolar(rng, (5, 128))
+        qp, spt = ops.pack_rows(q), ops.pack_rows(supers).T
+        gi, gs = ops.am_shortlist(qp, spt, n_dims=128, s=8,
+                                  use_kernel=True)
+        wi, ws = ref.am_shortlist(qp, spt, 128, 8)
+        np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+        np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+        gi, gs = np.asarray(gi), np.asarray(gs)
+        for r in range(gi.shape[0]):
+            pos = {int(gi[r, a]): a for a in range(8)}
+            for i in range(4):
+                # Copy pair (i, i + 4) ties: equal sims, lower id first.
+                assert gs[r, pos[i]] == gs[r, pos[i + 4]]
+                assert pos[i] < pos[i + 4]
+            # Global invariant: equal-sim runs are ordered by id.
+            for a in range(7):
+                assert (gs[r, a] > gs[r, a + 1]
+                        or (gs[r, a] == gs[r, a + 1]
+                            and gi[r, a] < gi[r, a + 1]))
+
+    def test_sparse_ties_break_on_original_id(self):
+        # Two clusters each holding one copy of every (duplicated)
+        # centroid; with both clusters shortlisted, the winner per tie
+        # pair must be the lower ORIGINAL id even though the layout
+        # permutation scattered the copies into different tiles.
+        from repro.deploy import hierarchical as hier
+        rng = geom_rng(41)
+        base = bipolar(rng, (6, 128))
+        am = jnp.concatenate([base, base], axis=0)        # ids 0..5 == 6..11
+        assign = np.array([0, 1] * 6, np.int32)           # interleaved
+        apt = np.asarray(ops.pack_rows(am).T)
+        layout = hier.build_layout(apt, assign, 2)
+        q = bipolar(rng, (4, 128))
+        qp = ops.pack_rows(q)
+        short = jnp.broadcast_to(jnp.arange(2, dtype=jnp.int32)[None],
+                                 (4, 2))
+        idx, sims = ops.am_search_sparse(
+            qp, jnp.asarray(layout.slab), jnp.asarray(layout.col_ids),
+            short, jnp.asarray(layout.tile_start),
+            jnp.asarray(layout.tile_count), n_dims=128, k=12,
+            max_tiles=layout.max_tiles, use_kernel=True)
+        idx, sims = np.asarray(idx), np.asarray(sims)
+        for r in range(4):
+            pos = {int(idx[r, a]): a for a in range(12)}
+            for i in range(6):
+                assert sims[r, pos[i]] == sims[r, pos[i + 6]]
+                assert pos[i] < pos[i + 6]
+            for a in range(11):
+                assert (sims[r, a] > sims[r, a + 1]
+                        or (sims[r, a] == sims[r, a + 1]
+                            and idx[r, a] < idx[r, a + 1]))
+
+    def _planted(self, rng, c, g, d=128, flip=0.05):
+        protos = rng.choice(np.array([-1.0, 1.0], np.float32),
+                            size=(g, d))
+        assign = rng.integers(0, g, size=c)
+        am = protos[assign]
+        am = np.where(rng.random(am.shape) < flip, -am, am)
+        return am.astype(np.float32), assign
+
+    def test_recall_at_paper_scale(self):
+        # Planted clusters at C=1024, G=32: the full pipeline (kmeans
+        # clustering + coarse shortlist + sparse fine search) must find
+        # the true best centroid for >= 99% of noisy queries at S=8.
+        import jax as _jax
+        from repro.deploy import hierarchical as hier
+        rng = np.random.default_rng(99)
+        c, g, d, s = 1024, 32, 128, 8
+        am, _ = self._planted(rng, c, g, d)
+        src = rng.integers(0, c, size=256)
+        q = am[src]
+        q = np.where(rng.random(q.shape) < 0.08, -q, q)
+        spt, layout = hier.build_search_state(
+            _jax.random.PRNGKey(0), am, g, kmeans_iters=6,
+            kmeans_sample=1024)
+        qp = ops.pack_rows(jnp.asarray(q))
+        short, _ = ops.am_shortlist(qp, spt, n_dims=d, s=s)
+        idx, sims = ops.am_search_sparse(
+            qp, jnp.asarray(layout.slab), jnp.asarray(layout.col_ids),
+            short, jnp.asarray(layout.tile_start),
+            jnp.asarray(layout.tile_count), n_dims=d, k=1,
+            max_tiles=layout.max_tiles)
+        exact = (q.astype(np.float32) @ am.T).max(axis=1)
+        recall = float(np.mean(np.asarray(sims)[:, 0] == exact))
+        assert recall >= 0.99, f"recall@1 {recall} < 0.99 at S={s}"
+
+    def test_s_equals_g_is_bit_exact_with_flat_scan(self):
+        import jax as _jax
+        from repro.deploy import hierarchical as hier
+        rng = np.random.default_rng(7)
+        c, g, d = 300, 16, 130  # ragged C and D
+        am, _ = self._planted(rng, c, g, d)
+        spt, layout = hier.build_search_state(
+            _jax.random.PRNGKey(1), am, g, kmeans_iters=4,
+            kmeans_sample=300)
+        q = rng.choice(np.array([-1.0, 1.0], np.float32), size=(9, d))
+        qp = ops.pack_rows(jnp.asarray(q))
+        apt = ops.pack_rows(jnp.asarray(am)).T
+        short, _ = ops.am_shortlist(qp, spt, n_dims=d, s=g)
+        idx, sims = ops.am_search_sparse(
+            qp, jnp.asarray(layout.slab), jnp.asarray(layout.col_ids),
+            short, jnp.asarray(layout.tile_start),
+            jnp.asarray(layout.tile_count), n_dims=d, k=1,
+            max_tiles=layout.max_tiles)
+        fi, fs = ops.am_search_packed(qp, apt, n_dims=d)
+        np.testing.assert_array_equal(np.asarray(idx)[:, 0],
+                                      np.asarray(fi))
+        np.testing.assert_array_equal(np.asarray(sims)[:, 0],
+                                      np.asarray(fs))
+
+
 # -- hypothesis-generated packed-path inputs --------------------------------
 # Guarded (not importorskip) so a missing hypothesis skips ONLY the
 # property class — the deterministic differential sweep above must run
@@ -294,3 +458,93 @@ if HAVE_HYPOTHESIS:
             np.testing.assert_array_equal(
                 np.asarray(ops.encode_pack(x, w)),
                 np.asarray(ref.encode_pack(x, w)))
+
+    @st.composite
+    def layout_geometry(draw):
+        """Random (C, G, seed) for cluster-layout invariants."""
+        c = draw(st.integers(1, 200))
+        g = draw(st.integers(1, 24))
+        seed = draw(st.integers(0, 2**31 - 1))
+        return c, g, seed
+
+    class TestClusterLayoutProperties:
+        """build_layout invariants: the physical permutation is a
+        bijection and every centroid lands in exactly one tile range —
+        the contract the sparse gather's correctness rests on."""
+
+        @settings(**SETTINGS)
+        @given(layout_geometry())
+        def test_layout_invariants(self, geom):
+            from repro.deploy import hierarchical as hier
+            c, g, seed = geom
+            rng = np.random.default_rng(seed)
+            am = rng.choice([-1.0, 1.0], size=(c, 64)).astype(np.float32)
+            apt = np.asarray(ops.pack_rows(jnp.asarray(am)).T)
+            assign = rng.integers(0, g, size=c).astype(np.int32)
+            layout = hier.build_layout(apt, assign, g)
+            col_ids = np.asarray(layout.col_ids)
+            starts = np.asarray(layout.tile_start)
+            counts = np.asarray(layout.tile_count)
+
+            # Permutation bijection: the valid slab columns hold every
+            # original centroid id exactly once, and nothing else.
+            valid = col_ids[col_ids >= 0]
+            assert sorted(valid.tolist()) == list(range(c))
+            # Each centroid sits in exactly one cluster's tile range,
+            # and it is its OWN cluster's range.
+            sizes = np.bincount(assign, minlength=g)
+            for grp in range(g):
+                lo, hi = starts[grp] * 128, (starts[grp]
+                                             + counts[grp]) * 128
+                ids_here = col_ids[lo:hi]
+                ids_here = ids_here[ids_here >= 0]
+                assert len(ids_here) == sizes[grp]
+                assert np.all(assign[ids_here] == grp)
+                # ceil-division tile accounting, never over-allocated.
+                assert counts[grp] == -(-int(sizes[grp]) // 128) or (
+                    sizes[grp] == 0 and counts[grp] in (0, 1))
+            # Trailing null tile: all-invalid, shared gather target.
+            assert layout.slab.shape[1] == layout.n_tiles * 128
+            assert np.all(col_ids[layout.null_tile * 128:] == -1)
+            # Slab columns carry the permuted packed payloads.
+            for col in range(min(c, 16)):  # spot-check the payload map
+                dest = np.nonzero(col_ids == col)[0][0]
+                np.testing.assert_array_equal(layout.slab[:, dest],
+                                              apt[:, col])
+
+        @settings(**SETTINGS)
+        @given(layout_geometry())
+        def test_expand_tiles_cover_exactly_the_shortlist(self, geom):
+            from repro.deploy import hierarchical as hier
+            from repro.kernels.am_search_sparse import (
+                expand_shortlist_tiles,
+            )
+            c, g, seed = geom
+            rng = np.random.default_rng(seed)
+            am = rng.choice([-1.0, 1.0], size=(c, 64)).astype(np.float32)
+            apt = np.asarray(ops.pack_rows(jnp.asarray(am)).T)
+            assign = rng.integers(0, g, size=c).astype(np.int32)
+            layout = hier.build_layout(apt, assign, g)
+            s = min(3, g)
+            short = np.stack([rng.permutation(g)[:s] for _ in range(4)])
+            tiles = np.asarray(expand_shortlist_tiles(
+                jnp.asarray(short.astype(np.int32)),
+                jnp.asarray(layout.tile_start),
+                jnp.asarray(layout.tile_count),
+                max_tiles=layout.max_tiles, null_tile=layout.null_tile))
+            col_ids = np.asarray(layout.col_ids)
+            starts = np.asarray(layout.tile_start)
+            counts = np.asarray(layout.tile_count)
+            for r in range(4):
+                want = {t for grp in short[r]
+                        for t in range(starts[grp],
+                                       starts[grp] + counts[grp])}
+                got = set(tiles[r].tolist())
+                assert got - {layout.null_tile} == want
+                # Every centroid of every shortlisted cluster is
+                # reachable through the expanded tiles.
+                reach = {i for t in got
+                         for i in col_ids[t * 128:(t + 1) * 128]
+                         if i >= 0}
+                assert reach == {int(i) for i in range(c)
+                                 if assign[i] in set(short[r].tolist())}

@@ -123,6 +123,45 @@ class TestDoubleBuffering:
             serve_batches(dep, _reqs([4]), depth=0)
 
 
+class TestTopkServing:
+    """--topk serving through the hierarchical backend's fused top-k
+    epilogue: per-request (n, k) class matrices whose first column is
+    the argmax path, bit for bit (defaults are the exact S = G mode)."""
+
+    def test_topk_first_column_matches_argmax(self, served):
+        ds, m, dep = served
+        dep_h = m.deploy(target="hierarchical")
+        reqs = synthetic_requests(np.asarray(ds.test_x), n_requests=6,
+                                  max_size=9, seed=13)
+        argmax, _ = serve_batches(dep, reqs, max_batch=16)
+        topk, stats = serve_batches(dep_h, reqs, max_batch=16, topk=3)
+        assert argmax.keys() == topk.keys()
+        for rid in argmax:
+            assert topk[rid].shape == (argmax[rid].shape[0], 3)
+            np.testing.assert_array_equal(topk[rid][:, 0], argmax[rid])
+
+    def test_topk_ranks_by_similarity(self, served):
+        ds, m, _ = served
+        dep_h = m.deploy(target="hierarchical")
+        x = np.asarray(ds.test_x[:12], np.float32)
+        cls, idx, sims = dep_h.predict_topk(x, 4)
+        sims = np.asarray(sims)
+        assert np.all(sims[:, :-1] >= sims[:, 1:])  # best-first
+        assert cls.shape == idx.shape == sims.shape == (12, 4)
+
+    def test_topk_with_fused_rejected(self, served):
+        _, _, dep = served
+        with pytest.raises(ValueError, match="topk"):
+            serve_batches(dep, _reqs([4]), topk=2, fused=True)
+
+    def test_topk_needs_predict_topk(self, served):
+        # Backends without a top-k epilogue fail loudly, not silently.
+        _, _, dep = served
+        assert not hasattr(type(dep), "predict_topk")
+        with pytest.raises(AttributeError):
+            serve_batches(dep, _reqs([4]), topk=2)
+
+
 class TestReportSchema:
     """The JSON report is a parsing contract; its key set is frozen.
 
@@ -133,11 +172,11 @@ class TestReportSchema:
 
     KEYS = {
         "workload", "backend", "devices", "packed", "mode", "pipeline",
-        "geometry", "requests", "rows", "wall_s", "qps", "rows_per_s",
-        "rows_per_s_per_device", "resident_am_bytes", "am_memory_ratio",
-        "depth", "batches", "rows_real", "rows_padded", "pad_overhead",
-        "lat_ms_min", "lat_ms_p50", "lat_ms_p95", "lat_ms_p99",
-        "lat_ms_total",
+        "topk", "geometry", "requests", "rows", "wall_s", "qps",
+        "rows_per_s", "rows_per_s_per_device", "resident_am_bytes",
+        "am_memory_ratio", "depth", "batches", "rows_real",
+        "rows_padded", "pad_overhead", "lat_ms_min", "lat_ms_p50",
+        "lat_ms_p95", "lat_ms_p99", "lat_ms_total",
     }
 
     def test_schema_stable(self, served):
@@ -151,6 +190,7 @@ class TestReportSchema:
                                fused=fused)
             assert set(rep) == self.KEYS
             assert rep["pipeline"] == ("fused" if fused else "staged")
+            assert rep["topk"] == 0  # argmax serving
             assert rep["workload"] == "memhd_classify"
             assert rep["backend"] == "packed"
             assert rep["devices"] == 1
@@ -168,6 +208,17 @@ class TestReportSchema:
         assert set(rep) == self.KEYS
         assert rep["mode"] == "float" and rep["packed"] is False
         assert rep["backend"] == "unpacked"
+
+    def test_topk_report_key(self, served):
+        ds, m, _ = served
+        dep_h = m.deploy(target="hierarchical")
+        reqs = synthetic_requests(np.asarray(ds.test_x), n_requests=2,
+                                  max_size=4, seed=3)
+        _, stats = serve_batches(dep_h, reqs, max_batch=8, topk=3)
+        rep = build_report(dep_h, reqs, stats, wall_s=0.1, topk=3)
+        assert set(rep) == self.KEYS
+        assert rep["topk"] == 3
+        assert rep["backend"] == "hierarchical"
 
     def test_imc_backend_report(self, served):
         ds, m, _ = served

@@ -52,6 +52,18 @@ class TestShardedWrapper:
         np.testing.assert_array_equal(
             np.asarray(sh.predict_features(feats)), want)
 
+    def test_predict_topk_parity_hierarchical(self, model, feats):
+        dep = model.deploy(target="hierarchical")
+        sh = ShardedArtifact(dep, devices=1)
+        want = dep.predict_topk(feats, 3)
+        got = sh.predict_topk(feats, 3)
+        for g, w in zip(got, want):  # (classes, ids, sims) triple
+            assert g.shape == (feats.shape[0], 3)
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+        # Ragged batches mask the padded tail rows of every leaf.
+        cls, idx, sims = sh.predict_topk(feats[:5], 2)
+        assert cls.shape == idx.shape == sims.shape == (5, 2)
+
     def test_ragged_rows_masked(self, model, feats):
         # Any batch size — including one not divisible by the mesh —
         # returns exactly n predictions (pad rows are dropped).
