@@ -12,6 +12,11 @@ non-zero when the trajectory regresses:
   * a timed metric slowed down by more than
     ``--max-slowdown-pct`` percent                    -> FAIL
   * schema_version mismatch                           -> FAIL
+  * a kernel the baseline dispatched on a better execution tier now
+    dispatches on a worse one (pallas > xla-oracle > ref, from the
+    records' ``meta.obs.dispatch_tiers``) — a kernel silently falling
+    off its fast path regresses even when its timings sit inside the
+    noise floor                                       -> FAIL
 
 New benches / new metrics in the current run pass (they become
 baselines when ``--update-baselines`` refreshes the committed set).
@@ -43,6 +48,56 @@ from benchmarks import record
 
 DEFAULT_MAX_SLOWDOWN_PCT = 100.0
 DEFAULT_MIN_US = 50.0
+
+# Execution-tier ordering for the dispatch-tier regression check:
+# higher is the faster/realer path. Unknown tiers rank lowest.
+TIER_RANK = {"ref": 0, "xla-oracle": 1, "pallas": 2}
+
+
+def _dispatch_tiers(rec: Dict) -> Dict[str, Dict[str, int]]:
+    return ((rec.get("meta") or {}).get("obs") or {}).get(
+        "dispatch_tiers") or {}
+
+
+def _best_tier(by_tier: Dict[str, int]) -> Optional[str]:
+    best = None
+    for tier, n in by_tier.items():
+        if n > 0 and (best is None
+                      or TIER_RANK.get(tier, -1) > TIER_RANK.get(best, -1)):
+            best = tier
+    return best
+
+
+def compare_tiers(bench: str, base: Dict, cur: Dict,
+                  ) -> Tuple[List[str], List[str]]:
+    """Dispatch-tier diff for one bench -> (failures, notes).
+
+    Per kernel both records exercised: the best tier serving it must
+    not drop (pallas -> xla-oracle is exactly the silent fallback this
+    check exists to catch). Kernels only the baseline saw, or baselines
+    recorded before tier data existed, are notes — not failures."""
+    failures: List[str] = []
+    notes: List[str] = []
+    base_tiers, cur_tiers = _dispatch_tiers(base), _dispatch_tiers(cur)
+    if not base_tiers:
+        return failures, notes  # pre-obs baseline: nothing to hold to
+    if not cur_tiers:
+        notes.append(f"{bench}: baseline has dispatch-tier data but "
+                     f"the current record has none")
+        return failures, notes
+    for kernel, by_tier in sorted(base_tiers.items()):
+        cur_by_tier = cur_tiers.get(kernel)
+        if cur_by_tier is None:
+            notes.append(f"{bench}: kernel {kernel} no longer "
+                         f"dispatched (was {_best_tier(by_tier)})")
+            continue
+        b, c = _best_tier(by_tier), _best_tier(cur_by_tier)
+        if (b is not None and c is not None
+                and TIER_RANK.get(c, -1) < TIER_RANK.get(b, -1)):
+            failures.append(
+                f"{bench}: kernel {kernel} fell from tier {b} to {c} "
+                f"(silent fast-path fallback)")
+    return failures, notes
 
 
 def load_dir(path: str) -> Dict[str, Dict]:
@@ -112,6 +167,9 @@ def compare(baseline: Dict[str, Dict], current: Dict[str, Dict], *,
         if extra_m:
             notes.append(f"{bench}: {len(extra_m)} new metric(s) not in "
                          f"baseline")
+        tier_fails, tier_notes = compare_tiers(bench, base, cur)
+        failures.extend(tier_fails)
+        notes.extend(tier_notes)
     for bench in sorted(set(current) - set(baseline)):
         notes.append(f"{bench}: new bench (no baseline yet — refresh "
                      f"with --update-baselines)")

@@ -70,6 +70,41 @@ _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 _ACTIVE: Optional["Recorder"] = None
 
 
+def _dispatch_breakdown() -> Optional[Dict[str, Dict[str, int]]]:
+    """{kernel: {tier: count}} from the obs registry (None if repro
+    isn't importable — record.py must stay usable standalone)."""
+    try:
+        from repro.kernels import ops
+    except ImportError:
+        return None
+    return ops.dispatch_breakdown()
+
+
+def _obs_meta(baseline: Optional[Dict[str, Dict[str, int]]]) -> Optional[Dict]:
+    """The record's ``meta["obs"]`` block: XLA compile count plus the
+    dispatch-tier counts THIS bench added over ``baseline`` (the
+    process-wide registry accumulates across benches in one run.py
+    process, so the per-bench delta is what's attributable). The gate
+    reads ``dispatch_tiers`` to flag a kernel silently falling off its
+    fast path even when timings stay inside the noise floor."""
+    current = _dispatch_breakdown()
+    if current is None:
+        return None
+    tiers: Dict[str, Dict[str, int]] = {}
+    base = baseline or {}
+    for kernel, by_tier in current.items():
+        for tier, n in by_tier.items():
+            delta = n - base.get(kernel, {}).get(tier, 0)
+            if delta > 0:
+                tiers.setdefault(kernel, {})[tier] = delta
+    try:
+        from repro.obs import jaxmon
+        compiles = jaxmon.compiles()
+    except ImportError:
+        compiles = 0
+    return {"compiles_total": compiles, "dispatch_tiers": tiers}
+
+
 def results_dir() -> str:
     """Default artifact directory (gitignored; $MEMHD_BENCH_DIR wins)."""
     return os.environ.get(ENV_DIR) or os.path.join(
@@ -128,6 +163,15 @@ class Recorder:
         self.out_dir = out_dir or results_dir()
         self.meta: Dict = dict(meta or {})
         self.metrics: Dict[str, Dict] = {}
+        # Count XLA compiles from here on (idempotent; no-op when the
+        # repro package isn't importable) and remember the dispatch
+        # counters' state so record() can attribute this bench's delta.
+        try:
+            from repro.obs import jaxmon
+            jaxmon.install()
+        except ImportError:
+            pass
+        self._obs_baseline = _dispatch_breakdown()
         # Pending time_fn stats, keyed by their exact median float: the
         # next row() whose us_per_call is that median claims them, so
         # every timed row carries min/p50/p95/p99 with zero changes in
@@ -153,6 +197,10 @@ class Recorder:
 
     def record(self) -> Dict:
         import jax
+        meta = dict(self.meta)
+        obs_meta = _obs_meta(self._obs_baseline)
+        if obs_meta is not None:
+            meta["obs"] = obs_meta
         return {
             "schema_version": SCHEMA_VERSION,
             "bench": self.bench,
@@ -160,7 +208,7 @@ class Recorder:
             "git_sha": git_sha(),
             "jax_backend": jax.default_backend(),
             "jax_version": jax.__version__,
-            "meta": self.meta,
+            "meta": meta,
             "metrics": self.metrics,
         }
 

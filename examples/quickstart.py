@@ -165,6 +165,46 @@ every candidate bit-exact with its ``ref.py`` oracle); re-tune after
 changing a kernel with:
 
     PYTHONPATH=src python -m repro.kernels.autotune --kernel all
+
+Observing the pipeline
+----------------------
+Every driver shares one dependency-free observability layer
+(``repro.obs``): a metrics registry (counters / gauges / log-bucket
+histograms), nested wall-clock tracing spans, and JAX runtime
+introspection (XLA compile counting via ``jax.monitoring``, device
+memory gauges). The serving driver exports both surfaces:
+
+    PYTHONPATH=src python -m repro.launch.serve_memhd --smoke \\
+        --depth 4 --metrics-out metrics.json --trace-out trace.json
+
+``metrics.json`` is the full registry snapshot; the serving report
+itself gains a ``metrics`` section with the three numbers to check
+first:
+
+  * ``recompiles_steady_state`` — XLA compiles during the *timed*
+    serve (after warmup). Anything above 0 means a shape leaked
+    through padding and jit is re-tracing per batch: the recompile
+    tax that hides inside "slow serving" numbers.
+  * ``dispatch_tiers`` — per-kernel counts of which execution tier
+    actually served each dispatch: ``pallas`` (the real kernel),
+    ``xla-oracle`` (the bit-exact XLA fallback some kernels take
+    off-TPU), ``ref`` (the pure-jnp oracle). A kernel you believed
+    was on its fast path showing up under ``ref`` is a silent 10x.
+  * ``compiles_total`` — compiles for the whole process (warmup
+    included), for judging cold-start cost.
+
+The report also splits every latency into ``queue_ms_*`` (time a
+batch sat behind its predecessors in the device queue — backpressure)
+vs ``service_ms_*`` (time the device actually worked); at
+``--depth 1`` queue is identically zero, and the two always sum to
+``lat_ms_*``. ``trace.json`` is Chrome trace-event format: open
+https://ui.perfetto.dev and drop the file in to see the per-batch
+``host_prep`` / ``pad`` / ``dispatch`` / ``device_wait`` spans and
+exactly where the pipeline bubbles are. The same layer powers
+``--log-json`` (structured logs) on every driver, per-epoch
+``events.jsonl`` next to training checkpoints, and the dispatch-tier
+regression check in ``benchmarks.gate`` (a kernel falling from
+``pallas`` to ``ref`` fails CI even when timings sit inside noise).
 """
 import jax
 

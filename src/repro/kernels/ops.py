@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.obs import metrics as _obs_metrics
 from repro.kernels.am_search import am_search as _am_search
 from repro.kernels.am_search import imc_cycles_for as search_cycles
 from repro.kernels.am_search_imc import am_search_imc as _am_search_imc
@@ -51,6 +52,41 @@ from repro.kernels.qail_update import qail_update as _qail_update
 
 Array = jax.Array
 
+# Every public dispatch below counts itself here, labeled with which
+# execution tier actually served it:
+#   pallas     — the Pallas kernel (interpret-mode emulation off-TPU)
+#   xla-oracle — the bit-exact XLA fallback the auto-dispatch kernels
+#                (am_shortlist / am_search_sparse) serve through off-TPU
+#   ref        — the pure-jnp ref.py oracle, requested explicitly
+# plus the static geometry, so a kernel silently falling off its fast
+# path (or a caller churning through padded shapes) shows up in any
+# metrics snapshot instead of only as latency noise. Counts increment
+# when the Python dispatch runs: once per trace for jitted callers
+# (i.e. per compiled specialization), per call in eager mode.
+_DISPATCH = _obs_metrics.counter(
+    "kernel_dispatch_total",
+    "kernel dispatches by (kernel, tier, geometry)")
+
+
+def _count(kernel: str, tier: str, **dims) -> None:
+    geometry = ",".join(f"{k}={v}" for k, v in sorted(dims.items()))
+    _DISPATCH.inc(kernel=kernel, tier=tier, geometry=geometry)
+
+
+def _tier(use_kernel: bool) -> str:
+    return "pallas" if use_kernel else "ref"
+
+
+def dispatch_breakdown() -> dict[str, dict[str, int]]:
+    """{kernel: {tier: count}} summed over geometries — the serving
+    report's and bench recorder's dispatch-tier table."""
+    out: dict[str, dict[str, int]] = {}
+    for labels, val in _DISPATCH.series():
+        k, t = labels.get("kernel", "?"), labels.get("tier", "?")
+        out.setdefault(k, {})
+        out[k][t] = out[k].get(t, 0) + int(val)
+    return out
+
 
 def tuned_block_b(kernel: str, block_b: int | None, **dims) -> int:
     """Resolve the batch tile for a dispatch: explicit arg wins, then
@@ -70,6 +106,7 @@ __all__ = [
     "predict_classes", "predict_packed", "predict_imc",
     "search_cycles", "imc_search_cycles", "packed_search_cycles",
     "mvm_cycles", "encode_pack_cycles", "ref", "tuned_block_b",
+    "dispatch_breakdown",
 ]
 
 
@@ -79,6 +116,8 @@ def encode_mvm(feats: Array, projection: Array, *, use_kernel: bool = True,
 
     feats: (B, f); projection: (f, D) bipolar. Returns (B, D) float32.
     """
+    _count("binary_mvm", _tier(use_kernel), B=feats.shape[0],
+           f=projection.shape[0], D=projection.shape[1])
     if not use_kernel:
         return ref.binary_mvm(feats, projection)
     return _binary_mvm(feats, projection)
@@ -93,6 +132,8 @@ def encode_pack(feats: Array, projection: Array, *, use_kernel: bool = True,
     never reaches HBM. Bit-identical to
     ``pack_rows(binarize_query(feats @ projection))``.
     """
+    _count("encode_pack", _tier(use_kernel), B=feats.shape[0],
+           f=projection.shape[0], D=projection.shape[1])
     if not use_kernel:
         return ref.encode_pack(feats, projection)
     bb = tuned_block_b("encode_pack", block_b,
@@ -111,6 +152,8 @@ def search_from_features(feats: Array, projection: Array,
     uint8 (``pack_am``). Returns (best_idx, best_sim) bit-exact with
     the staged encode_query -> pack_rows -> am_search_packed chain.
     """
+    _count("search_from_features", _tier(use_kernel), B=feats.shape[0],
+           D=projection.shape[1], C=am_packed_t.shape[1])
     if not use_kernel:
         qp = ref.encode_pack(feats, projection)
         return ref.am_search_packed(qp, am_packed_t, projection.shape[1])
@@ -126,6 +169,8 @@ def predict_from_features(feats: Array, projection: Array,
                           block_b: int | None = None) -> Array:
     """End-to-end §III-D prediction from raw features, one dispatch:
     fused encode/pack -> packed search -> ownership gather."""
+    _count("predict_from_features", _tier(use_kernel), B=feats.shape[0],
+           D=projection.shape[1], C=am_packed_t.shape[1])
     if not use_kernel:
         return ref.predict_from_features(feats, projection, am_packed_t,
                                          centroid_class)
@@ -145,6 +190,8 @@ def am_search(queries: Array, am: Array, *, use_kernel: bool = True,
 
     Returns (best_idx, best_sim): (B,) int32, (B,) float32.
     """
+    _count("am_search", _tier(use_kernel), B=queries.shape[0],
+           D=queries.shape[1], C=am.shape[0])
     am_t = am.T
     if not use_kernel:
         return ref.am_search(queries, am_t)
@@ -165,6 +212,8 @@ def am_search_imc(queries: Array, am: Array, *, sim, offsets: Array = None,
 
     Returns (best_idx, best_sim): (B,) int32, (B,) float32.
     """
+    _count("am_search_imc", _tier(use_kernel), B=queries.shape[0],
+           D=queries.shape[1], C=am.shape[0])
     am_t = am.T
     if not use_kernel:
         return ref.am_search_imc(
@@ -187,6 +236,8 @@ def am_search_packed(q_packed: Array, am_packed_t: Array, *, n_dims: int,
     Returns (best_idx, best_sim) bit-exact with ``am_search`` on the
     corresponding unpacked operands.
     """
+    _count("am_search_packed", _tier(use_kernel), B=q_packed.shape[0],
+           D=n_dims, C=am_packed_t.shape[1])
     if not use_kernel:
         return ref.am_search_packed(q_packed, am_packed_t, n_dims)
     bb = tuned_block_b("am_search_packed", block_b, D=n_dims,
@@ -209,6 +260,9 @@ def am_shortlist(q_packed: Array, super_packed_t: Array, *, n_dims: int,
     """
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
+    _count("am_shortlist", "pallas" if use_kernel else "xla-oracle",
+           B=q_packed.shape[0], D=n_dims, G=super_packed_t.shape[1],
+           S=s)
     if not use_kernel:
         return ref.am_shortlist(q_packed, super_packed_t, n_dims, s)
     bb = tuned_block_b("am_shortlist", block_b, D=n_dims,
@@ -242,6 +296,8 @@ def am_search_sparse(q_packed: Array, am_slab_t: Array, col_ids: Array,
     """
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
+    _count("am_search_sparse", "pallas" if use_kernel else "xla-oracle",
+           B=q_packed.shape[0], D=n_dims, S=shortlist.shape[1], K=k)
     if not use_kernel:
         null_tile = am_slab_t.shape[1] // 128 - 1
         tiles = _expand_shortlist_tiles(
@@ -258,6 +314,7 @@ def am_search_sparse(q_packed: Array, am_slab_t: Array, col_ids: Array,
 
 def pack_rows(x: Array, *, use_kernel: bool = True) -> Array:
     """(B, D) bipolar -> (B, ceil(D/8)) uint8, any D (tail bits 0)."""
+    _count("pack_rows", _tier(use_kernel), B=x.shape[0], D=x.shape[1])
     if not use_kernel:
         return ref.pack_rows(x)
     return _pack_rows(x)
@@ -285,6 +342,8 @@ def qail_update(q: Array, upd: Array, am_t: Array, centroid_class: Array,
     Returns (delta (C, D) float32, n_miss float32) — the Eq.-(6) shadow-AM
     increment for one minibatch, bit-exact between kernel and oracle.
     """
+    _count("qail_update", _tier(use_kernel), B=q.shape[0],
+           D=am_t.shape[0], C=am_t.shape[1])
     if not use_kernel:
         return ref.qail_update_delta(q, upd, am_t, centroid_class,
                                      labels, mask, lr)

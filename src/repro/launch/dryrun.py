@@ -224,8 +224,8 @@ def main():
                     help="also attempt cells marked SKIP (full-attn 500k)")
     args = ap.parse_args()
 
-    logging.basicConfig(level=logging.INFO,
-                        format="%(asctime)s %(name)s %(message)s")
+    from repro.obs import setup_logging
+    setup_logging()
 
     from repro.configs import cell_applicable, cells
 

@@ -22,6 +22,8 @@ import time
 
 import jax
 
+from repro import obs
+
 log = logging.getLogger("robustness_report")
 
 
@@ -51,8 +53,10 @@ def main():
     ap.add_argument("--finetune-epochs", type=int, default=10)
     ap.add_argument("--out", default=None,
                     help="write the JSON here instead of stdout")
+    ap.add_argument("--log-json", action="store_true",
+                    help="structured one-JSON-per-line logging")
     args = ap.parse_args()
-    logging.basicConfig(level=logging.INFO)
+    obs.setup_logging(json_mode=args.log_json)
 
     from repro.core import (
         EncoderConfig, ImcSimConfig, MemhdConfig, MemhdModel,

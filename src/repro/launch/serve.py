@@ -70,7 +70,8 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
-    logging.basicConfig(level=logging.INFO)
+    from repro.obs import setup_logging
+    setup_logging()
 
     from repro.configs import get_config, get_smoke_config
     from repro.models import transformer as T

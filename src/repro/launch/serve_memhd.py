@@ -39,13 +39,16 @@ import logging
 import math
 import time
 from collections import deque
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
+from repro import obs
+
 # Shared tile-padding helpers (re-exported here for existing callers).
 from repro.deploy.padding import pad_to_multiple, round_up  # noqa: F401
+from repro.obs import span
 
 log = logging.getLogger("serve_memhd")
 
@@ -103,11 +106,26 @@ def serve_batches(deployed, requests: Sequence[Request],
     ``depth`` is the double-buffer depth: up to ``depth`` batches may be
     in flight on the device while the host concatenates and pads the
     next one (jax dispatch is async; the host only blocks when the
-    pipeline is full). The default ``depth=1`` is the synchronous loop,
-    and its ``lat_ms_*`` stats are pure per-batch service latency —
-    comparable across releases. With ``depth > 1`` latency is measured
-    dispatch -> result ready and so INCLUDES pipeline queue wait; the
-    ``depth`` stat field tags every report with which semantics apply.
+    pipeline is full). The default ``depth=1`` is the synchronous loop.
+
+    Latency is reported DECOMPOSED, at any depth: ``lat_ms_*`` is the
+    total dispatch -> result-ready time per batch, split into
+    ``queue_ms_*`` (time the batch spent waiting behind earlier
+    in-flight batches — the pipeline queue wait that used to be
+    silently folded into ``lat_ms_*`` whenever ``depth > 1``) and
+    ``service_ms_*`` (the batch's own device time once the queue ahead
+    of it drained). Per batch ``queue + service == lat`` exactly; at
+    ``depth=1`` queue wait is identically zero. The decomposition
+    assumes in-order device execution (one stream), which is how a jax
+    device dispatch queue drains.
+
+    An empty request stream reports ``batches: 0`` and ``None`` for
+    every latency field (JSON ``null``) — no fabricated zero rows.
+
+    Each batch also emits host spans (``host_prep`` / ``pad`` /
+    ``dispatch`` / ``device_wait``, exportable as a Chrome trace via
+    ``repro.obs``) and feeds the ``serve_batch_ms`` histogram /
+    ``serve_rows_total`` counters of the default metrics registry.
 
     ``topk >= 1`` serves through the backend's ``predict_topk`` — the
     fused streaming top-k kernel epilogue — and each response row widens
@@ -140,32 +158,60 @@ def serve_batches(deployed, requests: Sequence[Request],
                 np.zeros((rows, n_feats), np.float32)))
     responses: Dict[int, np.ndarray] = {}
     lat_ms: List[float] = []
+    queue_ms: List[float] = []
+    service_ms: List[float] = []
     rows_real = rows_padded = 0
-    inflight: deque = deque()  # (batch, n_valid, pending result, t0)
+    inflight: deque = deque()  # (idx, batch, n_valid, result, t_disp)
+    last_ready = [float("-inf")]  # when the device finished batch k-1
+    hist = obs.histogram(
+        "serve_batch_ms", "per-batch serving latency by stage")
+    served_rows = obs.counter("serve_rows_total",
+                              "feature rows served (pre-padding)")
+    served_reqs = obs.counter("serve_requests_total",
+                              "classification requests served")
 
     def _drain_one():
-        batch, n_valid, fut, t0 = inflight.popleft()
-        jax.block_until_ready(fut)
-        lat_ms.append((time.perf_counter() - t0) * 1e3)
+        idx, batch, n_valid, fut, t_disp = inflight.popleft()
+        with span("device_wait", batch=idx):
+            jax.block_until_ready(fut)
+        t_ready = time.perf_counter()
+        # The batch could only start once everything dispatched before
+        # it had drained (in-order device queue): time up to the
+        # previous batch's completion is queue wait, the rest is this
+        # batch's own service time.
+        lat = t_ready - t_disp
+        queue = min(lat, max(0.0, last_ready[0] - t_disp))
+        last_ready[0] = t_ready
+        lat_ms.append(lat * 1e3)
+        queue_ms.append(queue * 1e3)
+        service_ms.append((lat - queue) * 1e3)
+        hist.observe(lat * 1e3, stage="total")
+        hist.observe(queue * 1e3, stage="queue")
+        hist.observe((lat - queue) * 1e3, stage="service")
         pred = np.asarray(fut)[:n_valid]
         ofs = 0
         for r in batch:
             responses[r.rid] = pred[ofs:ofs + r.size]
             ofs += r.size
 
-    for batch in batches:
+    for i, batch in enumerate(batches):
         # Host-side prep of batch k+1 overlaps device work on batch k.
-        feats = np.concatenate([r.feats for r in batch])
-        padded, n_valid = pad_to_multiple(feats, tile)
+        with span("host_prep", batch=i, requests=len(batch)):
+            feats = np.concatenate([r.feats for r in batch])
+            with span("pad", batch=i):
+                padded, n_valid = pad_to_multiple(feats, tile)
         rows_real += n_valid
         rows_padded += padded.shape[0]
         t0 = time.perf_counter()
-        inflight.append((batch, n_valid, predict(padded), t0))
+        with span("dispatch", batch=i, rows=padded.shape[0]):
+            fut = predict(padded)
+        inflight.append((i, batch, n_valid, fut, t0))
         while len(inflight) >= depth:
             _drain_one()
     while inflight:
         _drain_one()
-    lat = np.asarray(lat_ms) if lat_ms else np.zeros((1,))
+    served_rows.inc(rows_real)
+    served_reqs.inc(len(requests))
     stats = {
         "depth": depth,
         "batches": len(batches),
@@ -173,13 +219,28 @@ def serve_batches(deployed, requests: Sequence[Request],
         "rows_padded": rows_padded,
         "pad_overhead": (round(rows_padded / rows_real - 1, 3)
                          if rows_real else 0.0),
-        "lat_ms_min": round(float(lat.min()), 2),
-        "lat_ms_p50": round(float(np.percentile(lat, 50)), 2),
-        "lat_ms_p95": round(float(np.percentile(lat, 95)), 2),
-        "lat_ms_p99": round(float(np.percentile(lat, 99)), 2),
-        "lat_ms_total": round(float(lat.sum()), 2),
+        **_lat_fields("lat_ms", lat_ms),
+        **_lat_fields("service_ms", service_ms),
+        **_lat_fields("queue_ms", queue_ms),
     }
     return responses, stats
+
+
+def _lat_fields(prefix: str, vals: List[float],
+                ) -> Dict[str, Optional[float]]:
+    """min/p50/p95/p99/total fields for one latency series; all None
+    (JSON null) when the stream produced no batches."""
+    if not vals:
+        return {f"{prefix}_{s}": None
+                for s in ("min", "p50", "p95", "p99", "total")}
+    a = np.asarray(vals)
+    return {
+        f"{prefix}_min": round(float(a.min()), 3),
+        f"{prefix}_p50": round(float(np.percentile(a, 50)), 3),
+        f"{prefix}_p95": round(float(np.percentile(a, 95)), 3),
+        f"{prefix}_p99": round(float(np.percentile(a, 99)), 3),
+        f"{prefix}_total": round(float(a.sum()), 3),
+    }
 
 
 def synthetic_requests(feats: np.ndarray, n_requests: int,
@@ -194,16 +255,35 @@ def synthetic_requests(feats: np.ndarray, n_requests: int,
     return reqs
 
 
+def metrics_summary(recompiles_steady_state: Optional[int] = None,
+                    ) -> Dict:
+    """The report's ``metrics`` section: runtime facts wall clocks
+    can't show — total XLA compiles, compiles observed in the
+    steady-state (post-warmup) serving window, and the per-kernel
+    dispatch-tier breakdown (which execution tier actually served each
+    kernel — a silent fallback to the oracle path is visible here)."""
+    from repro.kernels import ops
+    out = {
+        "compiles_total": obs.jaxmon.compiles(),
+        "dispatch_tiers": ops.dispatch_breakdown(),
+    }
+    if recompiles_steady_state is not None:
+        out["recompiles_steady_state"] = int(recompiles_steady_state)
+    return out
+
+
 def build_report(deployed, requests: Sequence[Request], stats: Dict,
                  wall_s: float, fused: bool = False, topk: int = 0,
-                 ) -> Dict:
+                 metrics: Optional[Dict] = None) -> Dict:
     """Assemble the serving JSON report — the driver's output contract.
 
     Key set and value types are stable (asserted in
     tests/test_serving.py); downstream dashboards parse this. Works for
     any ``DeployedArtifact`` backend (and its sharded wrapper): the
     ``backend`` / ``devices`` fields make reports from different
-    substrates and device counts comparable.
+    substrates and device counts comparable. ``metrics`` is the
+    runtime-introspection section (``metrics_summary()``); it defaults
+    to a fresh summary with no steady-state window.
     """
     n_rows = sum(r.size for r in requests)
     devices = int(getattr(deployed, "n_devices", 1))
@@ -225,6 +305,7 @@ def build_report(deployed, requests: Sequence[Request], stats: Dict,
         "rows_per_s_per_device": round(rows_per_s / devices, 1),
         "resident_am_bytes": deployed.resident_am_bytes,
         "am_memory_ratio": round(deployed.am_memory_ratio, 2),
+        "metrics": metrics if metrics is not None else metrics_summary(),
         **stats,
     }
 
@@ -266,8 +347,17 @@ def main():
                     help="also persist the report as a schema-versioned "
                          "BENCH_serve_memhd.json (benchmarks.record) in "
                          "this directory — the perf-trajectory sink")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the full obs metrics-registry snapshot "
+                         "(counters/gauges/histograms) as JSON here")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the host-span Chrome trace-event JSON "
+                         "here (open in Perfetto / chrome://tracing)")
+    ap.add_argument("--log-json", action="store_true",
+                    help="structured one-JSON-per-line logging")
     args = ap.parse_args()
-    logging.basicConfig(level=logging.INFO)
+    obs.setup_logging(json_mode=args.log_json)
+    obs.install()  # count XLA compiles from the very first trace
 
     if args.target and args.unpacked:
         ap.error("--unpacked is the legacy alias; drop it with --target")
@@ -308,18 +398,33 @@ def main():
     reqs = synthetic_requests(np.asarray(ds.test_x), args.requests,
                               args.max_size)
     # Warmup pass compiles every padded batch shape; the timed pass then
-    # measures pure serving.
-    serve_batches(deployed, reqs, args.max_batch, fused=args.fused,
-                  depth=args.depth, topk=args.topk)
-    t0 = time.time()
-    responses, stats = serve_batches(deployed, reqs, args.max_batch,
-                                     warmup=False, fused=args.fused,
-                                     depth=args.depth, topk=args.topk)
-    wall = time.time() - t0
-    report = build_report(deployed, reqs, stats, wall, fused=args.fused,
-                          topk=args.topk)
+    # measures pure serving — and must not compile ANYTHING new
+    # (``recompiles_steady_state`` in the report's metrics section
+    # stays 0 unless the padding contract regressed).
+    with span("warmup"):
+        serve_batches(deployed, reqs, args.max_batch, fused=args.fused,
+                      depth=args.depth, topk=args.topk)
+    with obs.count_compiles() as steady_compiles:
+        t0 = time.time()
+        with span("serve", requests=len(reqs), depth=args.depth):
+            responses, stats = serve_batches(
+                deployed, reqs, args.max_batch, warmup=False,
+                fused=args.fused, depth=args.depth, topk=args.topk)
+        wall = time.time() - t0
+    obs.update_memory_gauges()
+    report = build_report(
+        deployed, reqs, stats, wall, fused=args.fused, topk=args.topk,
+        metrics=metrics_summary(
+            recompiles_steady_state=steady_compiles()))
     print(json.dumps(report, indent=1))
     assert len(responses) == len(reqs)
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(obs.snapshot(), f, indent=1)
+        log.info("metrics snapshot -> %s", args.metrics_out)
+    if args.trace_out:
+        obs.export_chrome_trace(args.trace_out)
+        log.info("chrome trace -> %s", args.trace_out)
     if args.record_dir:
         # benchmarks/ lives at the repo root, not under src/ — recording
         # therefore needs the repo root on sys.path (python -m from the

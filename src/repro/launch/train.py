@@ -40,7 +40,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 log = logging.getLogger("train")
+
+
+def _event_log(cfg: "TrainRunConfig") -> obs.EventLog:
+    """The run's JSONL event stream, next to the checkpoints: epoch /
+    step stats, checkpoint write durations, watchdog fires, resumes —
+    the machine-readable run history a dashboard tails live."""
+    return obs.EventLog(os.path.join(cfg.ckpt_dir, "events.jsonl"))
 
 
 @dataclasses.dataclass
@@ -59,6 +68,7 @@ class TrainRunConfig:
     step_deadline_s: float = 300.0
     fail_at_step: int = -1  # fault-injection for tests
     seed: int = 0
+    log_json: bool = False  # structured one-JSON-per-line logging
 
 
 class StepWatchdog:
@@ -127,6 +137,15 @@ def run_memhd(cfg: TrainRunConfig) -> dict:
     epochs = cfg.steps
 
     ckpt = CheckpointManager(CheckpointConfig(cfg.ckpt_dir, keep=cfg.keep))
+    events = _event_log(cfg)
+
+    def timed_save(step, tree, extra):
+        t0 = time.perf_counter()
+        ckpt.save(step, tree, extra=extra)
+        events.emit("checkpoint", step=step,
+                    dur_s=round(time.perf_counter() - t0, 4),
+                    emergency=bool(extra.get("emergency", False)))
+
     template = MemhdTrainState.create(model.am_state)
     restored_epoch, tree, extra = ckpt.restore(template)
     miss_hist = []
@@ -135,13 +154,14 @@ def run_memhd(cfg: TrainRunConfig) -> dict:
         start_epoch = restored_epoch
         miss_hist = list(extra.get("miss", []))
         log.info("resumed memhd from epoch %d", start_epoch)
+        events.emit("resume", step=start_epoch)
     else:
         m_init, _ = model.initialize_am(jax.random.key(cfg.seed + 1),
                                         ds.train_x, ds.train_y, h=h, q=q)
         state = m_init.am_state
         start_epoch = 0
-        ckpt.save(0, MemhdTrainState.create(state, 0),
-                  extra={"miss": miss_hist})
+        timed_save(0, MemhdTrainState.create(state, 0),
+                   extra={"miss": miss_hist})
 
     hb, qb, yb, mask = qail.prebatch(h, q, ds.train_y, amc.batch_size)
     # Emergency-checkpoint source: a HOST (numpy) snapshot of the last
@@ -153,29 +173,38 @@ def run_memhd(cfg: TrainRunConfig) -> dict:
 
     def emergency_ckpt():
         log.error("watchdog fired: writing emergency memhd checkpoint")
-        ckpt.save(last_epoch[0],
-                  MemhdTrainState.create(last_state[0], last_epoch[0]),
-                  extra={"miss": miss_hist, "emergency": True})
+        events.emit("watchdog", step=last_epoch[0],
+                    deadline_s=cfg.step_deadline_s)
+        timed_save(last_epoch[0],
+                   MemhdTrainState.create(last_state[0], last_epoch[0]),
+                   extra={"miss": miss_hist, "emergency": True})
 
     last_epoch = [start_epoch]
     t_start = time.time()
     for ep in range(start_epoch, epochs):
+        t_ep = time.perf_counter()
         with StepWatchdog(cfg.step_deadline_s, emergency_ckpt):
-            state, n_miss = qail.qail_epoch_scan(state, amc, hb, qb, yb,
-                                                 mask)
+            with obs.span("qail_epoch", epoch=ep):
+                state, n_miss = qail.qail_epoch_scan(state, amc, hb, qb,
+                                                     yb, mask)
         miss_rate = float(n_miss) / n  # the one host sync this epoch
+        dur_s = time.perf_counter() - t_ep
         miss_hist.append(miss_rate)
         last_state[0] = jax.tree.map(np.asarray, state)
         last_epoch[0] = ep + 1
+        events.emit("epoch", step=ep + 1, miss=round(miss_rate, 6),
+                    dur_s=round(dur_s, 4),
+                    samples_per_sec=round(n / dur_s, 1) if dur_s else None)
         if (ep + 1) % cfg.log_every == 0:
             log.info("epoch %d miss %.4f (%.2f s/epoch)", ep + 1,
                      miss_rate,
                      (time.time() - t_start) / (ep + 1 - start_epoch))
         if (ep + 1) % cfg.ckpt_every == 0 or ep + 1 == epochs:
-            ckpt.save(ep + 1, MemhdTrainState.create(state, ep + 1),
-                      extra={"miss": miss_hist})
+            timed_save(ep + 1, MemhdTrainState.create(state, ep + 1),
+                       extra={"miss": miss_hist})
         if cfg.fail_at_step == ep + 1:
             log.error("injected failure at epoch %d", ep + 1)
+            events.emit("injected_failure", step=ep + 1)
             os._exit(42)  # simulate a hard node death
 
     trained = dataclasses.replace(model, am_state=state)
@@ -183,6 +212,10 @@ def run_memhd(cfg: TrainRunConfig) -> dict:
     digest = hashlib.sha256(
         np.asarray(state["binary"]).tobytes()).hexdigest()
     dt = time.time() - t_start
+    events.emit("run_end", steps_run=epochs - start_epoch,
+                resumed_from=start_epoch, eval_acc=eval_acc,
+                wall_s=round(dt, 3), compiles=obs.jaxmon.compiles())
+    events.close()
     return {
         "first_miss": miss_hist[0] if miss_hist else None,
         "last_miss": miss_hist[-1] if miss_hist else None,
@@ -227,6 +260,15 @@ def run(cfg: TrainRunConfig) -> dict:
     start_step = 0
 
     ckpt = CheckpointManager(CheckpointConfig(cfg.ckpt_dir, keep=cfg.keep))
+    events = _event_log(cfg)
+
+    def timed_save(step, tree, extra):
+        t0 = time.perf_counter()
+        ckpt.save(step, tree, extra=extra)
+        events.emit("checkpoint", step=step,
+                    dur_s=round(time.perf_counter() - t0, 4),
+                    emergency=bool(extra.get("emergency", False)))
+
     restored_step, tree, extra = ckpt.restore(
         {"params": params, "opt": opt_state})
     if restored_step is not None:
@@ -236,38 +278,57 @@ def run(cfg: TrainRunConfig) -> dict:
         pipe = PipelineState.from_json(extra["pipeline"])
         start_step = restored_step
         log.info("resumed from step %d", start_step)
+        events.emit("resume", step=start_step)
 
     step_fn = jax.jit(make_train_step(mcfg, opt_cfg, sched))
 
     def emergency_ckpt():
         log.error("watchdog fired: writing emergency checkpoint")
-        ckpt.save(last_step[0], {"params": params, "opt": opt_state},
-                  extra={"pipeline": pipe.to_json(), "emergency": True})
+        events.emit("watchdog", step=last_step[0],
+                    deadline_s=cfg.step_deadline_s)
+        timed_save(last_step[0], {"params": params, "opt": opt_state},
+                   extra={"pipeline": pipe.to_json(), "emergency": True})
 
     last_step = [start_step]
     losses = []
     t_start = time.time()
     for step in range(start_step, cfg.steps):
+        t_step = time.perf_counter()
         batch_np, pipe = next_batch(dcfg, pipe)
         batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
         with StepWatchdog(cfg.step_deadline_s, emergency_ckpt):
-            params, opt_state, metrics = step_fn(
-                params, opt_state, batch, jnp.asarray(step, jnp.int32))
+            with obs.span("train_step", step=step):
+                params, opt_state, metrics = step_fn(
+                    params, opt_state, batch,
+                    jnp.asarray(step, jnp.int32))
         loss = float(metrics["loss"])
         losses.append(loss)
         last_step[0] = step + 1
         if not np.isfinite(loss):
+            events.emit("diverged", step=step, loss=loss)
             raise FloatingPointError(f"loss diverged at step {step}")
         if (step + 1) % cfg.log_every == 0:
+            dt_step = time.perf_counter() - t_step
             log.info("step %d loss %.4f (%.2f s/step)", step + 1, loss,
                      (time.time() - t_start) / (step + 1 - start_step))
+            events.emit("step", step=step + 1, loss=round(loss, 6),
+                        dur_s=round(dt_step, 4),
+                        tokens_per_sec=round(
+                            cfg.global_batch * cfg.seq_len / dt_step, 1)
+                        if dt_step else None)
         if (step + 1) % cfg.ckpt_every == 0 or step + 1 == cfg.steps:
-            ckpt.save(step + 1, {"params": params, "opt": opt_state},
-                      extra={"pipeline": pipe.to_json()})
+            timed_save(step + 1, {"params": params, "opt": opt_state},
+                       extra={"pipeline": pipe.to_json()})
         if cfg.fail_at_step == step + 1:
             log.error("injected failure at step %d", step + 1)
+            events.emit("injected_failure", step=step + 1)
             os._exit(42)  # simulate a hard node death
 
+    events.emit("run_end", steps_run=len(losses),
+                resumed_from=start_step,
+                wall_s=round(time.time() - t_start, 3),
+                compiles=obs.jaxmon.compiles())
+    events.close()
     return {
         "first_loss": losses[0] if losses else None,
         "last_loss": losses[-1] if losses else None,
@@ -287,8 +348,8 @@ def main():
     args = ap.parse_args()
     cfg = TrainRunConfig(**{f.name: getattr(args, f.name)
                             for f in dataclasses.fields(TrainRunConfig)})
-    logging.basicConfig(level=logging.INFO,
-                        format="%(asctime)s %(name)s %(message)s")
+    obs.setup_logging(json_mode=cfg.log_json)
+    obs.install()  # jit compile counters for the run_end event
     out = run(cfg)
     print(json.dumps(out, indent=1))
 

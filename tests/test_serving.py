@@ -1,11 +1,17 @@
 """serve_memhd driver: batcher accounting, fused-vs-staged parity on
-ragged request streams, and the JSON report schema contract."""
+ragged request streams, the queue/service latency decomposition, the
+obs integration (steady-state recompiles, dispatch tiers, trace
+export), and the JSON report schema contract."""
+import json
+
 import jax
 import numpy as np
 import pytest
 
+from repro import obs
 from repro.launch.serve_memhd import (Request, build_report, make_batches,
-                                      serve_batches, synthetic_requests)
+                                      metrics_summary, serve_batches,
+                                      synthetic_requests)
 
 
 @pytest.fixture(scope="module")
@@ -174,9 +180,14 @@ class TestReportSchema:
         "workload", "backend", "devices", "packed", "mode", "pipeline",
         "topk", "geometry", "requests", "rows", "wall_s", "qps",
         "rows_per_s", "rows_per_s_per_device", "resident_am_bytes",
-        "am_memory_ratio", "depth", "batches", "rows_real",
-        "rows_padded", "pad_overhead", "lat_ms_min", "lat_ms_p50",
-        "lat_ms_p95", "lat_ms_p99", "lat_ms_total",
+        "am_memory_ratio", "metrics", "depth", "batches", "rows_real",
+        "rows_padded", "pad_overhead",
+        "lat_ms_min", "lat_ms_p50", "lat_ms_p95", "lat_ms_p99",
+        "lat_ms_total",
+        "service_ms_min", "service_ms_p50", "service_ms_p95",
+        "service_ms_p99", "service_ms_total",
+        "queue_ms_min", "queue_ms_p50", "queue_ms_p95", "queue_ms_p99",
+        "queue_ms_total",
     }
 
     def test_schema_stable(self, served):
@@ -231,3 +242,134 @@ class TestReportSchema:
         assert rep["backend"] == "imc"
         assert rep["mode"] == "analog" and rep["packed"] is False
         assert rep["resident_am_bytes"] == dep_i.resident_bytes
+
+
+class TestEmptyStream:
+    """An empty request stream must not fabricate latency rows: every
+    latency field is None (JSON null) and ``batches`` is 0."""
+
+    LAT_FIELDS = [f"{p}_{s}" for p in ("lat_ms", "service_ms", "queue_ms")
+                  for s in ("min", "p50", "p95", "p99", "total")]
+
+    def test_empty_stream_null_latency(self, served):
+        _, _, dep = served
+        responses, stats = serve_batches(dep, [])
+        assert responses == {}
+        assert stats["batches"] == 0
+        assert stats["rows_real"] == 0 and stats["rows_padded"] == 0
+        assert stats["pad_overhead"] == 0.0
+        for field in self.LAT_FIELDS:
+            assert stats[field] is None, field
+
+    def test_empty_stream_report_is_json(self, served):
+        _, _, dep = served
+        _, stats = serve_batches(dep, [])
+        rep = build_report(dep, [], stats, wall_s=0.0)
+        parsed = json.loads(json.dumps(rep))  # nulls survive the trip
+        assert parsed["lat_ms_min"] is None
+        assert parsed["batches"] == 0
+        assert parsed["qps"] == 0.0
+
+
+class TestLatencyDecomposition:
+    """queue_ms + service_ms == lat_ms: the pipeline queue wait that
+    depth > 1 used to fold silently into lat_ms is now its own field."""
+
+    def _serve(self, served, depth, n=14):
+        ds, _, dep = served
+        reqs = synthetic_requests(np.asarray(ds.test_x), n_requests=n,
+                                  max_size=6, seed=3)
+        return serve_batches(dep, reqs, max_batch=8, depth=depth)
+
+    def test_depth1_queue_is_zero(self, served):
+        _, stats = self._serve(served, depth=1)
+        assert stats["batches"] >= 2
+        assert stats["queue_ms_total"] == 0.0
+        assert stats["service_ms_total"] == pytest.approx(
+            stats["lat_ms_total"], abs=0.01 * stats["batches"] + 0.01)
+
+    @pytest.mark.parametrize("depth", [2, 4])
+    def test_sum_consistent_at_depth(self, served, depth):
+        _, stats = self._serve(served, depth=depth)
+        assert stats["batches"] >= 2
+        # Per batch queue + service == lat exactly; the fields round to
+        # 3 decimals, so totals agree within the rounding budget.
+        tol = 0.002 * stats["batches"] + 0.01
+        assert (stats["service_ms_total"] + stats["queue_ms_total"]
+                == pytest.approx(stats["lat_ms_total"], abs=tol))
+        for s in ("min", "p50", "p95", "p99", "total"):
+            assert stats[f"queue_ms_{s}"] >= 0.0
+            assert stats[f"service_ms_{s}"] >= 0.0
+
+
+class TestObsIntegration:
+    """The acceptance contract: instrumented serving is bit-exact with
+    direct prediction, steady-state serving never recompiles, the
+    metrics section carries the dispatch-tier breakdown, and the trace
+    export is valid Chrome trace-event JSON."""
+
+    def test_predictions_bit_exact_with_uninstrumented(self, served):
+        ds, _, dep = served
+        reqs = synthetic_requests(np.asarray(ds.test_x), n_requests=8,
+                                  max_size=7, seed=9)
+        responses, _ = serve_batches(dep, reqs, max_batch=16, depth=4)
+        for r in reqs:
+            want = np.asarray(dep.predict(r.feats))
+            np.testing.assert_array_equal(responses[r.rid], want)
+
+    def test_steady_state_recompiles_zero(self, served):
+        ds, _, dep = served
+        reqs = synthetic_requests(np.asarray(ds.test_x), n_requests=10,
+                                  max_size=6, seed=4)
+        # Warmup pass compiles every padded shape the stream hits...
+        serve_batches(dep, reqs, max_batch=16, depth=4)
+        # ...so the steady-state pass must compile NOTHING new.
+        with obs.count_compiles() as steady:
+            _, stats = serve_batches(dep, reqs, max_batch=16,
+                                     warmup=False, depth=4)
+        assert steady() == 0
+        rep = build_report(
+            dep, reqs, stats, wall_s=0.1,
+            metrics=metrics_summary(recompiles_steady_state=steady()))
+        assert rep["metrics"]["recompiles_steady_state"] == 0
+        with obs.assert_no_recompiles("steady-state serving"):
+            serve_batches(dep, reqs, max_batch=16, warmup=False,
+                          depth=4)
+
+    def test_metrics_section_has_dispatch_tiers(self, served):
+        ds, _, dep = served
+        reqs = synthetic_requests(np.asarray(ds.test_x), n_requests=4,
+                                  max_size=5, seed=6)
+        _, stats = serve_batches(dep, reqs, max_batch=16)
+        rep = build_report(dep, reqs, stats, wall_s=0.1)
+        tiers = rep["metrics"]["dispatch_tiers"]
+        # The packed backend serves through pack_rows + the packed scan.
+        assert "am_search_packed" in tiers
+        assert tiers["am_search_packed"].get("pallas", 0) >= 1
+        assert rep["metrics"]["compiles_total"] >= 0
+        json.dumps(rep)  # the whole report stays JSON-serializable
+
+    def test_trace_export_is_valid_chrome_trace(self, served, tmp_path):
+        ds, _, dep = served
+        reqs = synthetic_requests(np.asarray(ds.test_x), n_requests=5,
+                                  max_size=5, seed=8)
+        obs.TRACER.reset()
+        serve_batches(dep, reqs, max_batch=16, depth=2)
+        path = obs.export_chrome_trace(str(tmp_path / "trace.json"))
+        with open(path) as f:
+            trace = json.load(f)
+        events = trace["traceEvents"]
+        assert events, "serving emitted no spans"
+        names = {e["name"] for e in events}
+        assert {"host_prep", "pad", "dispatch", "device_wait"} <= names
+        for e in events:
+            assert e["ph"] == "X"
+            assert e["dur"] >= 0 and e["ts"] > 0
+            assert isinstance(e["args"]["span_id"], int)
+        # pad spans nest under host_prep: parent ids resolve.
+        by_id = {e["args"]["span_id"]: e for e in events}
+        pads = [e for e in events if e["name"] == "pad"]
+        assert pads
+        for p in pads:
+            parent = by_id[p["args"]["parent_id"]]
+            assert parent["name"] == "host_prep"
