@@ -1,0 +1,124 @@
+"""Online serving benchmark: deadline-aware batching + live folds.
+
+Three phased runs of the ``repro.serve.OnlineEngine`` over one live
+deployment (packed backend, single device):
+
+  1. **steady** — an open-loop Poisson stream with per-request 250 ms
+     deadlines and no model updates. Asserts the p99-latency floor
+     (p99 <= deadline) and zero steady-state recompiles — the
+     deadline-aware batcher must close batches early enough that the
+     budget holds even while it waits to fill buckets.
+  2. **fold (shape-stable)** — labeled drifted feedback folds through
+     QAIL mid-stream; same geometry, so the generation swap must be
+     shape-stable and cost zero steady-state recompiles.
+  3. **fold (class growth)** — feedback labeled with a never-seen
+     class grows the AM live; post-swap arrivals for the new class
+     must be predicted (hit rate >= 0.5).
+
+Rows: the steady-phase per-batch service p50 is the machine-bound
+timing the regression gate tracks; deadline/fold/accuracy rows carry
+their numbers as derived values with in-bench assertions (they measure
+policy and learning, not raw machine speed).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row
+
+DEADLINE_MS = 250.0
+RATE_QPS = 400.0
+N_STEADY = 80
+N_PHASE = 30
+MAX_BATCH = 64
+MAX_WAIT_MS = 20.0
+DRIFT = 0.4
+
+
+def main() -> None:
+    import jax
+
+    from repro.core import EncoderConfig, MemhdConfig, MemhdModel
+    from repro.data import load_dataset
+    from repro.serve import (
+        OnlineEngine, StreamingUpdater, apply_drift, feedback_burst,
+        merge_events, poisson_arrivals,
+    )
+
+    ds = load_dataset("mnist", train_per_class=120, test_per_class=30)
+    known = ds.classes - 1  # last class appended live in phase 3
+    tr_x, tr_y = np.asarray(ds.train_x), np.asarray(ds.train_y)
+    te_x, te_y = np.asarray(ds.test_x), np.asarray(ds.test_y)
+    mask = tr_y < known
+    enc = EncoderConfig(kind="projection", features=ds.features, dim=128)
+    amc = MemhdConfig(dim=128, columns=4 * known, classes=known,
+                      epochs=3, kmeans_iters=3)
+    model = MemhdModel.create(jax.random.key(0), enc, amc)
+    model, _ = model.fit(jax.random.key(1), tr_x[mask], tr_y[mask])
+
+    upd = StreamingUpdater(model, model.deploy(target="packed"),
+                           fold_epochs=2)
+    eng = OnlineEngine(upd, max_batch=MAX_BATCH, depth=2,
+                       max_wait_ms=MAX_WAIT_MS)
+    kw = dict(rate_qps=RATE_QPS, max_size=6, deadline_ms=DEADLINE_MS,
+              labels_pool=te_y)
+
+    # -- phase 1: steady deadline stream, no folds ------------------------
+    rep = eng.serve(poisson_arrivals(te_x, n_requests=N_STEADY,
+                                     classes=range(known), seed=1,
+                                     **kw))
+    assert rep["requests"] == N_STEADY
+    assert rep["recompiles_steady_state"] == 0, rep
+    p99 = rep["lat_ms_p99"]
+    # The p99-deadline floor: the whole point of deadline-aware
+    # admission. A miss here means the batcher waited past the budget.
+    assert p99 is not None and p99 <= DEADLINE_MS, (
+        f"steady p99 {p99}ms blew the {DEADLINE_MS}ms deadline")
+    assert rep["deadline_miss_rate"] == 0.0, rep["deadline_miss_rate"]
+    row("online/steady_service_p50", rep["service_ms_p50"] * 1e3,
+        f"avg_batch={rep['avg_batch_rows']}",
+        rows_per_s=rep["rows_per_s"])
+    row("online/steady_p99", 0.0, f"{p99}ms<= {DEADLINE_MS}ms",
+        p99_ms=p99, p50_ms=rep["lat_ms_p50"],
+        deadline_miss_rate=rep["deadline_miss_rate"])
+
+    # -- phase 2: shape-stable drift fold ---------------------------------
+    fb = feedback_burst(apply_drift(tr_x[mask], DRIFT), tr_y[mask],
+                        t=0.0, fold=True)
+    arr = poisson_arrivals(apply_drift(te_x, DRIFT),
+                           n_requests=N_PHASE, classes=range(known),
+                           rid_base=10_000, seed=2, **kw)
+    rep = eng.serve(merge_events(fb, arr))
+    gen = rep["generations"][0]
+    assert gen["shape_stable"] is True, gen
+    assert rep["recompiles_steady_state"] == 0, rep
+    assert rep["recompiles_excluded"]["rewarm"] == 0, rep
+    row("online/fold_stable", 0.0, f"{gen['fold_ms']}ms",
+        fold_ms=gen["fold_ms"], n_samples=gen["n_samples"],
+        shape_stable=True)
+
+    # -- phase 3: live class append ---------------------------------------
+    new = tr_y == known
+    fb = feedback_burst(tr_x[new], tr_y[new], t=0.0, fold=True)
+    arr = poisson_arrivals(te_x, n_requests=N_PHASE, classes=[known],
+                           rid_base=20_000, seed=3, **kw)
+    rep = eng.serve(merge_events(fb, arr))
+    gen = rep["generations"][0]
+    assert gen["shape_stable"] is False and gen["n_new_classes"] == 1
+    assert rep["recompiles_steady_state"] == 0, rep
+    hits = total = 0
+    for a in arr:
+        pred = np.asarray(eng.responses[a.request.rid])
+        hits += int((pred == known).sum())
+        total += pred.shape[0]
+    hit_rate = hits / total
+    assert hit_rate >= 0.5, f"appended class hit rate {hit_rate:.2f}"
+    row("online/fold_grow", 0.0, f"{gen['fold_ms']}ms",
+        fold_ms=gen["fold_ms"], classes=gen["classes"],
+        rewarm_compiles=rep["recompiles_excluded"]["rewarm"])
+    row("online/append_hit_rate", 0.0, round(hit_rate, 3),
+        generation=rep["model_generation"])
+
+
+if __name__ == "__main__":
+    main()

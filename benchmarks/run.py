@@ -31,6 +31,7 @@ BENCHES = [
     ("pipeline", "benchmarks.pipeline_bench"),
     ("train_throughput", "benchmarks.train_throughput"),
     ("serve_scaling", "benchmarks.serve_scaling"),
+    ("online_serving", "benchmarks.online_serving"),
     ("fig_robustness", "benchmarks.fig_robustness"),
     ("fig3", "benchmarks.fig3_accuracy_memory"),
     ("fig4", "benchmarks.fig4_heatmap"),
@@ -43,7 +44,7 @@ BENCHES = [
 ]
 FAST = {"table2", "fig7", "kernel", "packed", "pipeline",
         "train_throughput", "fig_robustness", "roofline",
-        "hierarchical_search"}
+        "hierarchical_search", "online_serving"}
 
 
 def resolve_selection(only: str | None, fast: bool,

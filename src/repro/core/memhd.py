@@ -313,6 +313,85 @@ class MemhdModel:
         model = dataclasses.replace(model, am_state=state)
         return model, {"init": init_hist, "curve": curve}
 
+    # -- class-incremental growth ------------------------------------------------
+    def grow_classes(self, feats: Array, labels: Array,
+                     *, centroids_per_class: int = 1,
+                     h: Optional[Array] = None,
+                     ) -> "MemhdModel":
+        """Append never-seen classes to the AM: (C, D) -> (C + k·n, D).
+
+        The extended-learning move (XL-HD): classes beyond the current
+        ``am_cfg.classes`` get fresh centroids — the per-class mean of
+        their encoded samples (chunk-split when ``centroids_per_class``
+        > 1), rescaled to the mean norm of the existing float centroids
+        so Eq.-(6) nudges and the global binarization threshold stay
+        proportionate — WITHOUT touching the existing centroids or
+        retraining. The returned model is a normal ``MemhdModel`` at the
+        grown geometry; follow with ``fit(init_method="keep")`` (or
+        ``qail.fold_feedback``) to polish the new rows against the old.
+
+        Growth MUST happen before folding feedback that carries the new
+        labels: QAIL's Eq.-(5) target selection masks on centroid
+        ownership, and a label owning no centroid silently corrupts the
+        update (the masked argmax degenerates to centroid 0).
+
+        Args:
+          feats: (n, f) raw feature rows; only rows labeled beyond the
+            current class count seed new centroids.
+          labels: (n,) int labels. New classes must be contiguous from
+            ``am_cfg.classes`` (class ids are dense by construction
+            everywhere else).
+          centroids_per_class: centroids allocated per appended class.
+          h: optional pre-encoded ``encode(feats)`` to reuse (the
+            encoder is untouched by growth, so any encode stays valid).
+
+        Returns:
+          The grown model (new ``am_state`` + ``am_cfg``; encoder
+          shared). Raises if no label exceeds the current classes.
+        """
+        import numpy as np
+        old_k = self.am_cfg.classes
+        yn = np.asarray(labels, np.int64)
+        new_classes = sorted(int(c) for c in np.unique(yn) if c >= old_k)
+        if not new_classes:
+            raise ValueError(
+                f"no labels beyond the current {old_k} classes")
+        if new_classes != list(range(old_k, old_k + len(new_classes))):
+            raise ValueError(
+                f"appended classes must be contiguous from {old_k}, "
+                f"got {new_classes}")
+        if centroids_per_class < 1:
+            raise ValueError("centroids_per_class must be >= 1")
+        if h is None:
+            h = self.encode(feats)
+        hn = np.asarray(h, np.float32)
+
+        fp = self.am_state["fp"]
+        owners = self.am_state["centroid_class"]
+        scale = float(jnp.mean(jnp.linalg.norm(fp, axis=-1)))
+        rows, row_owners = [], []
+        for c in new_classes:
+            members = hn[yn == c]
+            if members.shape[0] == 0:
+                raise ValueError(f"class {c} has no samples to seed from")
+            for part in np.array_split(members, centroids_per_class):
+                m = (part if part.shape[0] else members).mean(axis=0)
+                if scale > 0:
+                    m = m * (scale / max(float(np.linalg.norm(m)), 1e-8))
+                rows.append(m)
+                row_owners.append(c)
+
+        fp_new = jnp.concatenate(
+            [fp, jnp.asarray(np.stack(rows), jnp.float32)])
+        owners_new = jnp.concatenate(
+            [owners, jnp.asarray(row_owners, jnp.int32)])
+        cfg = dataclasses.replace(
+            self.am_cfg,
+            columns=self.am_cfg.columns + len(rows),
+            classes=old_k + len(new_classes))
+        state = am_lib.make_am_state(fp_new, owners_new, cfg.threshold)
+        return MemhdModel(self.enc_params, state, self.enc_cfg, cfg)
+
     # -- inference ---------------------------------------------------------------
     def predict(self, feats: Array) -> Array:
         return _predict_feats(self.enc_params, self.enc_cfg,

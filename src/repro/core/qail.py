@@ -404,6 +404,42 @@ def qail_epoch_batched(state: AmState, cfg: MemhdConfig,
     return state, n_miss / n
 
 
+def fold_feedback(state: AmState, cfg: MemhdConfig,
+                  h: Array, queries: Array, labels: Array,
+                  *, epochs: int = 1, refresh_every: int = 1,
+                  use_kernel: bool = False,
+                  ) -> Tuple[AmState, float]:
+    """Fold a labeled feedback buffer into the AM — the online-learning
+    primitive behind ``repro.serve.StreamingUpdater``.
+
+    A lean ``fit(init_method="keep")``: no clustering init, no eval, no
+    checkpointing — just ``prebatch`` once and run ``epochs``
+    device-resident ``qail_epoch_scan`` passes over the buffer. Every
+    label must own at least one centroid (grow the AM first via
+    ``MemhdModel.grow_classes`` when feedback carries never-seen
+    classes — Eq.-(5)'s ownership-masked argmax silently corrupts the
+    update otherwise). Non-consuming: on donating backends the scan gets
+    a copy, so the caller's ``state`` — typically the live serving
+    model's — survives.
+
+    Returns (new_state, miss_rate) with miss_rate from the LAST epoch
+    (one host sync total — earlier epochs' miss scalars are never
+    pulled).
+    """
+    if epochs < 1:
+        raise ValueError(f"epochs must be >= 1, got {epochs}")
+    n = h.shape[0]
+    hb, qb, yb, mask = prebatch(h, queries, labels, cfg.batch_size)
+    if _DONATE:
+        state = jax.tree.map(jnp.copy, state)
+    n_miss = jnp.zeros(())
+    for _ in range(epochs):
+        state, n_miss = qail_epoch_scan(state, cfg, hb, qb, yb, mask,
+                                        refresh_every=refresh_every,
+                                        use_kernel=use_kernel)
+    return state, float(n_miss) / n
+
+
 def qail_epoch_hostloop(state: AmState, cfg: MemhdConfig,
                         h: Array, queries: Array, labels: Array,
                         *, refresh_every: int = 1) -> Tuple[AmState, float]:

@@ -112,6 +112,42 @@ class DeployedArtifact:
         return eval_lib.batched_accuracy(self.predict_query, q, labels,
                                          batch)
 
+    # -- live-update surface ---------------------------------------------------
+    def _deploy_opts(self) -> dict:
+        """Backend kwargs that rebuild an equivalent artifact through the
+        registry — the options this artifact was deployed with. Backends
+        with deploy-time knobs (kernel mode, sim config, cluster
+        geometry) override this so ``refresh`` reproduces them."""
+        return {}
+
+    def refresh(self, model) -> "DeployedArtifact":
+        """Re-freeze this artifact from an updated model.
+
+        The default re-deploys through the registry under the same
+        backend target and ``_deploy_opts()``; backends with a cheaper
+        same-shape path (rewrite the resident buffers, keep the layout)
+        override it. Always returns a NEW artifact — deployment
+        artifacts are immutable, and the online-serving swap contract
+        (``repro.serve``) depends on old generations staying intact for
+        in-flight queries.
+        """
+        from repro.deploy import registry
+        return registry.deploy(model, self.backend, **self._deploy_opts())
+
+    @property
+    def swap_signature(self):
+        """Hashable (treedef, leaf avals) fingerprint of this artifact.
+
+        Two artifacts with equal signatures present identical jit
+        signatures as operands — swapping one for the other re-uses
+        every compiled executable (zero recompiles). A changed
+        signature (e.g. class growth widened the AM) means the swap
+        will trace one bounded set of new executables.
+        """
+        leaves, treedef = jax.tree_util.tree_flatten(self)
+        return (treedef, tuple(
+            (tuple(l.shape), str(l.dtype)) for l in leaves))
+
     # -- reporting / accounting ------------------------------------------------
     @property
     def backend(self) -> str:

@@ -88,6 +88,24 @@ class DeployedMemhd(DeployedArtifact):
             feats, self.enc_params["projection"], self.am_packed_t,
             self.centroid_class, mode=self.mode)
 
+    # -- live updates ----------------------------------------------------------
+    def _deploy_opts(self) -> dict:
+        return {"mode": self.mode}
+
+    def refresh(self, model) -> "DeployedMemhd":
+        """Cheap re-freeze from an updated model: rewrite the resident
+        buffers, keep the statics. Same-C refreshes keep every leaf
+        shape, so an online swap of the result is recompile-free."""
+        from repro.core import am as am_lib
+        binary = model.am_state["binary"]
+        return dataclasses.replace(
+            self,
+            enc_params=model.enc_params,
+            am_binary=None if self.packed else binary,
+            am_packed_t=am_lib.pack_am(binary) if self.packed else None,
+            centroid_class=model.am_state["centroid_class"],
+            am_cfg=model.am_cfg)
+
     # -- reporting / accounting ------------------------------------------------
     @property
     def backend(self) -> str:

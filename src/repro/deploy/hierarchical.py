@@ -353,6 +353,63 @@ class HierarchicalMemhd(DeployedArtifact):
         q = encoding.encode_query(self.enc_params, self.enc_cfg, feats)
         return self.topk_query(q, k)
 
+    # -- live updates ----------------------------------------------------------
+    def refresh(self, model) -> "HierarchicalMemhd":
+        """Re-freeze from an updated model.
+
+        Same-C refresh is LAYOUT-PRESERVING: the frozen cluster
+        assignment (``col_ids`` permutation and tile geometry) is kept
+        and only the resident bits are rewritten — slab values from the
+        new binary AM, super-centroids re-voted under the frozen
+        membership. Every leaf shape and every static is unchanged, so
+        an online swap of the result is recompile-free. A QAIL fold
+        nudges centroids, it does not teleport them, so the frozen
+        clustering stays near-optimal; re-cluster by re-deploying when
+        drift accumulates.
+
+        Class growth (C changed) has no slot in the frozen layout —
+        that path re-clusters from scratch through the registry (one
+        bounded recompile set at the new geometry).
+        """
+        binary = np.asarray(model.am_state["binary"], np.float32)
+        if binary.shape[0] != int(self.centroid_class.shape[0]):
+            from repro.deploy import registry
+            return registry.deploy(model, self.backend,
+                                   **self._deploy_opts())
+        col_ids = np.asarray(self.col_ids)
+        packed = pack_rows_np(binary)  # (C, Dp)
+        slab = np.zeros((packed.shape[1], col_ids.shape[0]), np.uint8)
+        valid = col_ids >= 0
+        slab[:, valid] = packed[col_ids[valid]].T
+
+        # Majority re-vote of each super-centroid over its (frozen)
+        # member columns; empty clusters keep their old super.
+        tile_start = np.asarray(self.tile_start)
+        tile_count = np.asarray(self.tile_count)
+        supers = np.ones((self.groups, binary.shape[1]), np.float32)
+        for g in range(self.groups):
+            lo = int(tile_start[g]) * TILE
+            members = col_ids[lo:lo + int(tile_count[g]) * TILE]
+            members = members[members >= 0]
+            if members.size:
+                votes = binary[members].sum(axis=0)
+                supers[g] = np.where(votes >= 0, 1.0, -1.0)
+        return dataclasses.replace(
+            self,
+            enc_params=model.enc_params,
+            super_packed_t=jnp.asarray(pack_rows_np(supers).T),
+            am_slab_t=jnp.asarray(slab),
+            centroid_class=model.am_state["centroid_class"],
+            am_cfg=model.am_cfg)
+
+    def _deploy_opts(self) -> dict:
+        # Exact-mode deployments (S == G) stay exact at the new C
+        # (both default); a dialed-down shortlist keeps its ratio
+        # meaningless across a re-cluster, so keep the absolute S.
+        exact = self.shortlist == self.groups
+        return {"groups": None, "shortlist": None if exact
+                else self.shortlist}
+
     # -- reporting / accounting ------------------------------------------------
     @property
     def backend(self) -> str:

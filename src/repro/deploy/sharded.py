@@ -75,6 +75,35 @@ class ShardedArtifact:
         # Only reached for names not set on the wrapper itself.
         return getattr(self.artifact, name)
 
+    # -- live updates ----------------------------------------------------------
+    def with_artifact(self, artifact) -> "ShardedArtifact":
+        """A wrapper serving ``artifact`` that SHARES this wrapper's mesh
+        and jitted shard_map cache.
+
+        This is the sharded half of the online-serving swap contract:
+        the artifact is an *operand* of the cached jit functions, so a
+        shape-stable new generation hits the already-compiled
+        executables (zero recompiles) — but ONLY if the swap reuses the
+        same jit objects. A freshly-constructed ``ShardedArtifact``
+        would carry a fresh ``_fns`` cache and recompile every method on
+        first call. Queries already dispatched against the old wrapper
+        keep their old-generation operand — the swap is race-free by
+        construction.
+        """
+        if isinstance(artifact, ShardedArtifact):
+            raise TypeError("artifact is already sharded")
+        new = ShardedArtifact.__new__(ShardedArtifact)
+        new.artifact = artifact
+        new.mesh = self.mesh
+        new.n_devices = self.n_devices
+        new._fns = self._fns  # shared jit objects -> shared compile cache
+        return new
+
+    def refresh(self, model) -> "ShardedArtifact":
+        """Re-freeze the wrapped artifact from an updated model, keeping
+        this wrapper's mesh and compile cache."""
+        return self.with_artifact(self.artifact.refresh(model))
+
     # -- sharded dispatch ------------------------------------------------------
     def _sharded_fn(self, key: str, local):
         """The jitted shard_map of ``local(artifact, rows)``, cached
@@ -94,7 +123,10 @@ class ShardedArtifact:
 
     def _call(self, key: str, local, feats):
         if not hasattr(feats, "shape"):
-            feats = np.asarray(feats, np.float32)
+            # Preserve the caller's dtype: forcing f32 here would make
+            # the sharded path disagree with the single-device artifact
+            # (and warm a different jit signature) for non-f32 streams.
+            feats = np.asarray(feats)
         n = int(feats.shape[0])
         m = round_up(max(n, 1), self.n_devices)
         # pad_rows is namespace-agnostic: numpy batches pad on the host

@@ -69,6 +69,12 @@ class ImcDeployedMemhd(DeployedArtifact):
         return ops.predict_imc(q, self.am_analog, self.centroid_class,
                                sim=self.sim, offsets=self.tile_offsets)
 
+    # -- live updates ----------------------------------------------------------
+    def _deploy_opts(self) -> dict:
+        # refresh() re-burns the updated binary AM onto the SAME
+        # simulated device instance (sim carries the seed).
+        return {"sim": self.sim}
+
     # -- reporting / accounting ------------------------------------------------
     @property
     def backend(self) -> str:

@@ -150,12 +150,16 @@ def serve_batches(deployed, requests: Sequence[Request],
         predict = (deployed.predict_features if fused
                    else deployed.predict)
     batches = make_batches(requests, max_batch)
-    if warmup:
-        n_feats = requests[0].feats.shape[1] if requests else 0
+    if warmup and requests:
+        # The warmup batches must hit the SAME jit signatures the stream
+        # will: shape AND dtype (a non-f32 stream warmed with f32 zeros
+        # would silently recompile every steady-state shape).
+        n_feats = requests[0].feats.shape[1]
+        dtype = requests[0].feats.dtype
         shapes = {round_up(sum(r.size for r in b), tile) for b in batches}
         for rows in sorted(shapes):
             jax.block_until_ready(predict(
-                np.zeros((rows, n_feats), np.float32)))
+                np.zeros((rows, n_feats), dtype)))
     responses: Dict[int, np.ndarray] = {}
     lat_ms: List[float] = []
     queue_ms: List[float] = []
@@ -218,7 +222,7 @@ def serve_batches(deployed, requests: Sequence[Request],
         "rows_real": rows_real,
         "rows_padded": rows_padded,
         "pad_overhead": (round(rows_padded / rows_real - 1, 3)
-                         if rows_real else 0.0),
+                         if rows_real else None),
         **_lat_fields("lat_ms", lat_ms),
         **_lat_fields("service_ms", service_ms),
         **_lat_fields("queue_ms", queue_ms),

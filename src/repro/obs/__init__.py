@@ -28,14 +28,14 @@ from repro.obs.jaxmon import (
 from repro.obs.logs import EventLog, setup_logging
 from repro.obs.metrics import (
     REGISTRY, counter, gauge, histogram, log_buckets, render_prometheus,
-    snapshot,
+    snapshot, timed_ms,
 )
 from repro.obs.trace import TRACER, export_chrome_trace, span
 
 __all__ = [
     "metrics", "trace", "jaxmon",
     "REGISTRY", "counter", "gauge", "histogram", "log_buckets",
-    "snapshot", "render_prometheus",
+    "snapshot", "render_prometheus", "timed_ms",
     "TRACER", "span", "export_chrome_trace",
     "install", "count_compiles", "assert_no_recompiles",
     "RecompileError", "update_memory_gauges",

@@ -28,6 +28,8 @@ from __future__ import annotations
 import math
 import re
 import threading
+import time
+from contextlib import contextmanager
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 LabelDict = Dict[str, str]
@@ -279,6 +281,25 @@ class Registry:
                 lines.append(f"{name}_sum{suffix} {_fmt(st['sum'])}")
                 lines.append(f"{name}_count{suffix} {st['count']}")
         return "\n".join(lines) + "\n"
+
+
+@contextmanager
+def timed_ms(hist: Histogram, **labels):
+    """Observe the body's wall time (milliseconds) into ``hist``.
+
+        with timed_ms(obs.histogram("update_fold_ms"), backend="packed"):
+            fold()
+
+    Yields a zero-arg callable returning the elapsed ms so far — after
+    the block it is the recorded value (callers that also report the
+    duration don't need a second clock).
+    """
+    t0 = time.perf_counter()
+    elapsed = lambda: (time.perf_counter() - t0) * 1e3  # noqa: E731
+    try:
+        yield elapsed
+    finally:
+        hist.observe(elapsed(), **labels)
 
 
 def _cumulative(counts: Sequence[int]) -> List[int]:

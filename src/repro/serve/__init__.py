@@ -1,0 +1,35 @@
+"""repro.serve — the online serving engine.
+
+Open-loop timed serving with live class-incremental learning, built
+from three pieces:
+
+  * ``repro.serve.stream`` — the event vocabulary: ``OnlineRequest`` /
+    ``Arrival`` / ``Feedback``, plus Poisson arrival generators,
+    feedback bursts, and deterministic drift for staging scenarios.
+  * ``repro.serve.updater`` — ``StreamingUpdater``: buffers labeled
+    feedback, folds it through the device-resident QAIL scan (growing
+    the AM first when feedback names never-seen classes), and re-
+    freezes a new immutable artifact generation per fold.
+  * ``repro.serve.engine`` — ``OnlineEngine``: deadline-aware adaptive
+    batching over an admission queue, a depth-deep double-buffered
+    pipeline, atomic artifact swaps between generations, and per-phase
+    compile accounting (``recompiles_steady_state`` must stay 0).
+
+The closed-loop benchmark path stays in ``repro.launch.serve_memhd``;
+this package is what a long-running deployment would actually run.
+"""
+from repro.serve.engine import (
+    OnlineEngine, ServiceModel, batch_buckets, plan_batch,
+)
+from repro.serve.stream import (
+    Arrival, Feedback, OnlineRequest, apply_drift, feedback_burst,
+    merge_events, poisson_arrivals,
+)
+from repro.serve.updater import StreamingUpdater, UpdateResult
+
+__all__ = [
+    "OnlineEngine", "ServiceModel", "batch_buckets", "plan_batch",
+    "Arrival", "Feedback", "OnlineRequest", "apply_drift",
+    "feedback_burst", "merge_events", "poisson_arrivals",
+    "StreamingUpdater", "UpdateResult",
+]

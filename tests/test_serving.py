@@ -257,7 +257,9 @@ class TestEmptyStream:
         assert responses == {}
         assert stats["batches"] == 0
         assert stats["rows_real"] == 0 and stats["rows_padded"] == 0
-        assert stats["pad_overhead"] == 0.0
+        # No rows -> no overhead RATIO: 0.0 would claim "measured, and
+        # perfectly packed"; null says "nothing to measure".
+        assert stats["pad_overhead"] is None
         for field in self.LAT_FIELDS:
             assert stats[field] is None, field
 
@@ -335,6 +337,26 @@ class TestObsIntegration:
         with obs.assert_no_recompiles("steady-state serving"):
             serve_batches(dep, reqs, max_batch=16, warmup=False,
                           depth=4)
+
+    def test_non_f32_stream_warmup_matches_dtype(self, served):
+        """Warmup must pre-compile the dtype the stream actually
+        carries: a float16 stream warmed with float32 zeros would hit
+        cold jit signatures on every steady-state batch (the regression
+        this pins down — warmup now reads ``requests[0].feats.dtype``).
+        """
+        ds, _, dep = served
+        reqs = synthetic_requests(np.asarray(ds.test_x), n_requests=10,
+                                  max_size=6, seed=4)
+        reqs = [Request(rid=r.rid,
+                        feats=r.feats.astype(np.float16))
+                for r in reqs]
+        serve_batches(dep, reqs, max_batch=16, depth=2)  # warmup pass
+        with obs.assert_no_recompiles("non-f32 steady-state serving"):
+            responses, _ = serve_batches(dep, reqs, max_batch=16,
+                                         warmup=False, depth=2)
+        for r in reqs:  # and the f16 stream still predicts correctly
+            np.testing.assert_array_equal(
+                responses[r.rid], np.asarray(dep.predict(r.feats)))
 
     def test_metrics_section_has_dispatch_tiers(self, served):
         ds, _, dep = served

@@ -64,6 +64,19 @@ class TestShardedWrapper:
         cls, idx, sims = sh.predict_topk(feats[:5], 2)
         assert cls.shape == idx.shape == sims.shape == (5, 2)
 
+    def test_non_f32_parity(self, model, feats):
+        """The wrapper must hand the shard_map the caller's dtype:
+        the old ``np.asarray(feats, np.float32)`` silently upcast f16
+        queries, so sharded and single-device paths saw different
+        inputs (and every non-f32 caller paid a hidden cast)."""
+        dep = model.deploy(target="packed")
+        sh = ShardedArtifact(dep, devices=1)
+        for dtype in (np.float16, np.float64):
+            x = feats.astype(dtype)
+            np.testing.assert_array_equal(
+                np.asarray(sh.predict(x)),
+                np.asarray(dep.predict(x)))
+
     def test_ragged_rows_masked(self, model, feats):
         # Any batch size — including one not divisible by the mesh —
         # returns exactly n predictions (pad rows are dropped).
