@@ -1,0 +1,115 @@
+"""Multi-bit memory/accuracy frontier: bits-per-cell vs deployment accuracy.
+
+Sweeps the resident-AM precision ladder at the flagship geometry —
+1-bit (the paper's packed deployment), 2-bit and 4-bit (the bit-sliced
+``target="multibit"`` backend, quantization-aware fine-tuned via
+``fit(cell_bits=...)``) — against the 32-bit unpacked float path, and
+across the paper geometries for residence/timing. The acceptance
+contract of the multi-bit backend lives here: at least one of the
+{2, 4}-bit points must hold iso-accuracy with the unpacked path
+(within 0.5 pt) at >= 2x less resident AM memory.
+"""
+import json
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import dataset, row, section, time_fn
+from repro.core import EncoderConfig, MemhdConfig, MemhdModel
+from repro.imcsim import multibit_finetune
+from repro.kernels import ref
+
+BITS = (1, 2, 4)
+GEOMS = [(128, 128), (256, 256), (512, 128)]
+FLAGSHIP = (128, 128)
+FINETUNE_EPOCHS = 4
+ISO_ACC_PT = 0.005       # iso-accuracy tolerance: 0.5 accuracy points
+MIN_MEM_REDUCTION = 2.0  # vs the unpacked float path
+
+
+def _train(ds):
+    d, c = FLAGSHIP
+    enc = EncoderConfig(kind="projection", features=ds.features, dim=d)
+    amc = MemhdConfig(dim=d, columns=c, classes=ds.classes, epochs=6,
+                      kmeans_iters=10, lr=0.02)
+    m = MemhdModel.create(jax.random.key(0), enc, amc)
+    m, _ = m.fit(jax.random.key(1), ds.train_x, ds.train_y)
+    return m
+
+
+def main() -> None:
+    d, c = FLAGSHIP
+    section(f"multibit_frontier: bits/cell vs accuracy ({d}x{c})")
+    ds = dataset("mnist")
+    model = _train(ds)
+
+    unpacked = model.deploy(target="unpacked")
+    unpacked_acc = unpacked.score(ds.test_x, ds.test_y)
+    row("multibit_frontier/unpacked_acc", 0.0, f"{unpacked_acc:.3f}",
+        resident_bytes=unpacked.resident_bytes)
+
+    frontier = []
+    for bits in BITS:
+        if bits == 1:
+            dep = model.deploy(target="packed")
+        else:
+            tuned, _ = multibit_finetune(
+                model, jax.random.key(2), ds.train_x, ds.train_y, bits,
+                epochs=FINETUNE_EPOCHS)
+            dep = tuned.deploy(target="multibit", cell_bits=bits)
+        acc = dep.score(ds.test_x, ds.test_y)
+        reduction = unpacked.resident_bytes / dep.resident_bytes
+        rec = {
+            "bench": "multibit_frontier",
+            "bits": bits,
+            "backend": dep.backend,
+            "accuracy": round(float(acc), 4),
+            "resident_bytes": dep.resident_bytes,
+            "memory_bits": (dep.memory_bits if bits > 1
+                            else dep.enc_cfg.memory_bits
+                            + dep.am_cfg.am_memory_bits),
+            "mem_reduction_vs_unpacked": round(reduction, 2),
+            "iso_accuracy": bool(acc >= unpacked_acc - ISO_ACC_PT),
+        }
+        frontier.append(rec)
+        print(json.dumps(rec), flush=True)
+        row(f"multibit_frontier/b{bits}_acc", 0.0, f"{acc:.3f}",
+            **{k: v for k, v in rec.items() if k != "bench"})
+
+    # Acceptance: >= 1 multi-bit point holds iso-accuracy at >= 2x less
+    # resident AM memory than the unpacked float path.
+    winners = [r for r in frontier if r["bits"] > 1 and r["iso_accuracy"]
+               and r["mem_reduction_vs_unpacked"] >= MIN_MEM_REDUCTION]
+    assert winners, (
+        f"no multi-bit point holds iso-accuracy (within {ISO_ACC_PT}) at "
+        f">= {MIN_MEM_REDUCTION}x memory reduction: {frontier} "
+        f"(unpacked acc {unpacked_acc:.4f})")
+    best = min(winners, key=lambda r: r["bits"])
+    row("multibit_frontier/best", 0.0,
+        f"b{best['bits']}:{best['mem_reduction_vs_unpacked']:.0f}x",
+        **{k: v for k, v in best.items() if k != "bench"})
+
+    # Residence + oracle timing across the paper geometries (random
+    # codes: the kernel searches the integer code domain, accuracy is
+    # geometry-independent here).
+    section("multibit_frontier: residence/timing across geometries")
+    rng = np.random.default_rng(0)
+    for gd, gc in GEOMS:
+        q = jnp.asarray(rng.choice([-1., 1.], size=(256, gd))
+                        .astype(np.float32))
+        for bits in (2, 4):
+            qmax = 2 ** (bits - 1) - 1
+            codes = rng.integers(-qmax, qmax + 1, size=(gc, gd))
+            planes = ref.pack_planes(jnp.asarray(codes + qmax), bits)
+            us = time_fn(
+                jax.jit(lambda qq, pp, b=bits: ref.am_search_multibit(
+                    qq, pp, cell_bits=b)), q, planes, iters=3)
+            plane_bytes = int(planes.size)
+            row(f"multibit_frontier/{gd}x{gc}_b{bits}", us,
+                f"bytes={plane_bytes};"
+                f"vs_f32={gd * gc * 4 / plane_bytes:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

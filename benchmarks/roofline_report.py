@@ -5,6 +5,13 @@ dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and ranks hillclimb
 candidates: worst roofline fraction, most collective-bound, and the MoE
 flagship. Also emits the EXPERIMENTS.md §Roofline markdown table to
 reports/roofline_table.md.
+
+The kernel section rooflines the repro's own dispatch layer: one probe
+dispatch per registered kernel (all nine), the execution tier that
+actually served it (``ops.dispatch_breakdown`` — a silent oracle
+fallback is visible here), and the analytic arithmetic intensity
+(flops per HBM byte at the probe geometry) that decides which side of
+the machine balance point each kernel lands on.
 """
 import glob
 import json
@@ -28,7 +35,94 @@ def load_reports(mesh: str = "16x16"):
     return out
 
 
+def kernel_dispatch_section() -> None:
+    """One probe dispatch per registered kernel: served tier + analytic
+    arithmetic intensity (flops per HBM byte) at the probe geometry."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.types import ImcArrayConfig, ImcSimConfig
+    from repro.deploy import hierarchical as hier
+    from repro.kernels import ops, ref
+
+    section("Roofline: kernel dispatch tiers + arithmetic intensity")
+    rng = np.random.default_rng(0)
+    b, f, d, c, bits = 8, 32, 128, 16, 2
+
+    def bip(shape):
+        return jnp.asarray(rng.choice([-1., 1.], size=shape)
+                           .astype(np.float32))
+
+    feats = jnp.asarray(rng.random((b, f), dtype=np.float32))
+    proj = bip((f, d))
+    q, am = bip((b, d)), bip((c, d))
+    qp = ops.pack_rows(q)
+    apt = ops.pack_rows(am).T
+    qmax = 2 ** (bits - 1) - 1
+    codes = rng.integers(-qmax, qmax + 1, size=(c, d))
+    planes = ref.pack_planes(jnp.asarray(codes + qmax), bits)
+    g = 2
+    assign = rng.integers(0, g, size=c).astype(np.int32)
+    layout = hier.build_layout(np.asarray(apt), assign, g)
+    short = jnp.zeros((b, 1), jnp.int32)
+    owners = jnp.arange(c, dtype=jnp.int32) % 3
+    labels = jnp.zeros((b,), jnp.int32)
+    mask = jnp.ones((b,), jnp.float32)
+    sim = ImcSimConfig(arr=ImcArrayConfig(rows=128, cols=128))
+
+    # (kernel, probe thunk, flops, hbm bytes) — flops count the MVM /
+    # popcount work, bytes the operand + result traffic (packed operands
+    # at 1/8 byte per cell, bit planes at bits/8).
+    probes = [
+        ("binary_mvm", lambda: ops.encode_mvm(feats, proj),
+         2 * b * f * d, 4 * (b * f + f * d + b * d)),
+        ("encode_pack", lambda: ops.encode_pack(feats, proj),
+         2 * b * f * d + b * d, 4 * (b * f + f * d) + b * d // 8),
+        ("am_search", lambda: ops.am_search(q, am),
+         2 * b * d * c + b * c, 4 * (b * d + d * c) + 8 * b),
+        ("am_search_imc", lambda: ops.am_search_imc(q, am, sim=sim),
+         2 * b * d * c + 2 * b * c, 4 * (b * d + d * c) + 8 * b),
+        ("am_search_multibit",
+         lambda: ops.am_search_multibit(q, planes),
+         bits * 2 * b * d * c + 2 * b * c,
+         4 * b * d + bits * (d // 8) * c + 8 * b),
+        ("am_search_packed",
+         lambda: ops.am_search_packed(qp, apt, n_dims=d),
+         2 * b * c * (d // 8), (b + c) * (d // 8) + 8 * b),
+        ("am_shortlist",
+         lambda: ops.am_shortlist(qp, apt, n_dims=d, s=2),
+         2 * b * c * (d // 8) + 2 * b * c,
+         (b + c) * (d // 8) + 2 * 4 * b),
+        ("am_search_sparse",
+         lambda: ops.am_search_sparse(
+             qp, jnp.asarray(layout.slab), jnp.asarray(layout.col_ids),
+             short, jnp.asarray(layout.tile_start),
+             jnp.asarray(layout.tile_count), n_dims=d, k=1,
+             max_tiles=layout.max_tiles),
+         2 * b * layout.slab.shape[1] * (d // 8),
+         (b + layout.slab.shape[1]) * (d // 8) + 8 * b),
+        ("qail_update",
+         lambda: ops.qail_update(q, q, am.T, owners, labels, mask,
+                                 lr=0.5),
+         2 * b * d * c + 4 * b * d, 4 * (b * d + 2 * d * c)),
+    ]
+    for kernel, probe, flops, nbytes in probes:
+        before = ops.dispatch_breakdown().get(kernel, {})
+        probe()
+        after = ops.dispatch_breakdown().get(kernel, {})
+        tiers = [t for t in after
+                 if after.get(t, 0) > before.get(t, 0)]
+        tier = tiers[0] if tiers else "uncounted"
+        ai = flops / nbytes
+        row(f"roofline/kernel/{kernel}", 0.0,
+            f"tier={tier};ai={ai:.1f}flops/B",
+            tier=tier, flops=flops, hbm_bytes=nbytes,
+            arithmetic_intensity=round(ai, 2))
+    assert len(probes) == 9, "keep this table in sync with ops.py"
+
+
 def main() -> None:
+    kernel_dispatch_section()
     section("Roofline: single-pod (16x16) baselines from dry-run")
     reps = load_reports("16x16")
     if not reps:

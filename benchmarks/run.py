@@ -41,10 +41,11 @@ BENCHES = [
     ("roofline", "benchmarks.roofline_report"),
     ("hillclimb", "benchmarks.hillclimb"),
     ("hierarchical_search", "benchmarks.hierarchical_search"),
+    ("multibit_frontier", "benchmarks.multibit_frontier"),
 ]
 FAST = {"table2", "fig7", "kernel", "packed", "pipeline",
         "train_throughput", "fig_robustness", "roofline",
-        "hierarchical_search", "online_serving"}
+        "hierarchical_search", "online_serving", "multibit_frontier"}
 
 
 def resolve_selection(only: str | None, fast: bool,

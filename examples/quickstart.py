@@ -20,6 +20,9 @@ artifact it returns implements the same ``DeployedArtifact`` protocol
     floats = model.deploy(target="unpacked")   # float MXU (parity ref)
     analog = model.deploy(target="imc",        # simulated noisy device
                           sim=ImcSimConfig(adc_bits=6, noise_sigma=0.5))
+    int4   = model.deploy(target="multibit",   # bit-sliced int4 cells
+                          cell_bits=4)
+    coarse = model.deploy(target="hierarchical")  # two-stage top-k index
 
 * ``"packed"`` (the default) packs the trained binary AM 8 cells/byte
   into a (ceil(D/8), C) uint8 residence — the paper's Table-I 1-bit
@@ -36,9 +39,15 @@ artifact it returns implements the same ``DeployedArtifact`` protocol
   the resident cells, per-array analog partial sums through a
   finite-resolution ADC. An ideal ``sim`` is bit-exact with the
   digital backends; a lossy one is what the robustness sweeps measure.
+* ``"multibit"`` stores the FLOAT shadow AM at 2-8 bits per cell as
+  plane-packed offset codes and serves it through the bit-sliced
+  Pallas kernel — the precision ladder between ``"packed"`` (1 bit)
+  and ``"unpacked"`` (32 bits). See "Multi-bit cells" below.
+* ``"hierarchical"`` builds the two-stage coarse-to-fine top-k index
+  over the packed AM (see "Scaling to huge label spaces" below).
 
-New backends (multi-bit packing, remote arrays) plug in with
-``@repro.deploy.register_backend("name")`` — no model changes.
+New backends (remote arrays, product-quantized residuals) plug in
+with ``@repro.deploy.register_backend("name")`` — no model changes.
 
 Serving at scale: any artifact wraps in
 ``repro.deploy.ShardedArtifact(dep, devices=N)``, which shards each
@@ -54,6 +63,38 @@ batch k+1 while batch k is in flight — and a latency/QPS JSON report
 tagged with ``backend`` and ``devices``). The scaling sweep lives in
 ``python -m benchmarks.serve_scaling``; the kernel comparisons in
 ``benchmarks/packed_vs_unpacked.py`` and ``--only pipeline``.
+
+Multi-bit cells: trading bits for accuracy
+------------------------------------------
+The 1-bit packed deployment throws away everything but the sign of the
+trained float shadow. ``target="multibit"`` keeps 2-8 bits of it:
+``quantize_am`` picks a symmetric mid-tread quantizer (the clip chosen
+by an MSE grid search — a max-anchored scale at 2 bits rounds most of
+the heavy-tailed shadow to zero), and the codes are packed as
+``cell_bits`` bit PLANES of 8 cells/byte along D. The bit-sliced
+kernel (``kernels/am_search_multibit``) runs one {0,1} MVM pass per
+plane on the same ``am_search_imc`` tiling and combines the partial
+sums with shifted weights in VMEM — integer-exact, so the kernel is
+bit-for-bit the code-domain MVM (asserted against its oracle across
+the parity grid). Residence is ``C*D*cell_bits/8`` bytes: 16x / 8x
+under the float AM at 2 / 4 bits, and the Table-I ``memory_bits``
+accounting generalizes via ``MemhdConfig.am_memory_bits_at(b)``.
+
+Because deployment quantizes the float shadow, fine-tune the model
+against the SAME quantized view before freezing it — the
+quantization-aware hook re-quantizes the live shadow inside every
+training-time similarity MVM (the §III-C idea at b bits):
+
+    from repro.imcsim import multibit_finetune
+    tuned, _ = multibit_finetune(model, key, x, y, cell_bits=4)
+    dep = tuned.deploy(target="multibit", cell_bits=4)
+
+An optional drift-only ``ImcSimConfig`` attaches array geometry and
+per-tile readout offsets (storage perturbations are 1-bit semantics
+and are rejected). The frontier bench sweeps bits in {1, 2, 4} and
+gates iso-accuracy at >= 2x memory reduction vs the unpacked path:
+``python -m benchmarks.run --only multibit_frontier``; serving rides
+the standard driver via ``--target multibit --cell-bits 4``.
 
 Scaling to huge label spaces
 ----------------------------
@@ -317,6 +358,25 @@ def main():
     assert (np.asarray(top5)[:, 0] == pred_staged[:256]).all()
     print(f"hierarchical deployment ({hier.serving_mode}): bit-exact "
           f"with packed; top-5 classes served in one fused dispatch")
+
+    # Multi-bit cells: keep 4 bits of the float shadow instead of its
+    # sign. Quantization-aware fine-tuning trains against the same
+    # 4-bit view the deployment serves; residence sits 8x under the
+    # float AM (and the kernel readout is integer-exact vs its oracle).
+    from repro.imcsim import multibit_finetune
+    tuned4, _ = multibit_finetune(model, jax.random.key(3),
+                                  ds.train_x, ds.train_y, cell_bits=4,
+                                  epochs=4)
+    int4 = tuned4.deploy(target="multibit", cell_bits=4)
+    acc_int4 = int4.score(ds.test_x, ds.test_y)
+    unpacked_bytes = model.deploy(
+        target="unpacked").resident_am_bytes
+    print(f"multibit deployment ({int4.serving_mode}): "
+          f"{int4.resident_am_bytes} B resident "
+          f"({unpacked_bytes / int4.resident_am_bytes:.1f}x under the "
+          f"float AM), acc {acc_int4:.3f} vs packed {acc_packed:.3f}, "
+          f"memory_bits {int4.memory_bits}")
+    assert unpacked_bytes / int4.resident_am_bytes >= 2.0
 
     # Live updates: the deployment keeps learning while it serves.
     # Labeled feedback from a drifted distribution folds through the

@@ -62,6 +62,50 @@ def from_unipolar(bits: Array, dtype=jnp.float32) -> Array:
     return (bits.astype(dtype) * 2.0 - 1.0)
 
 
+def quantize_am(fp_am: Array, cell_bits: int) -> Tuple[Array, Array]:
+    """Symmetric per-tensor ``cell_bits``-bit quantization of the float AM.
+
+    The multi-bit deployment stores the float shadow at reduced
+    precision instead of binarizing it: Qmax = 2^(b-1) - 1 levels per
+    sign, codes = clip(round(fp/scale), +-Qmax) — the MIMHD-style
+    multi-level-cell representation. ``codes * scale`` dequantizes;
+    similarity argmax is scale-invariant so kernels search directly in
+    the integer code domain.
+
+    The clip (scale * Qmax) is chosen by a small deterministic grid
+    search minimizing quantization MSE, not max|fp|: the QAIL float
+    shadow is heavy-tailed, and a max-anchored scale at 2-bit cells
+    rounds ~90% of the AM to code 0 (chance accuracy). The grid is a
+    fixed fraction ladder of max|fp|, so the search is jit-compatible —
+    ``qail_epoch_scan`` re-quantizes inside the scan body.
+
+    Returns:
+      (codes, scale): (C, D) int32 codes in [-Qmax, +Qmax] and the ()
+      float32 scale (guarded > 0 even for an all-zero AM).
+    """
+    if not 2 <= cell_bits <= 8:
+        raise ValueError(f"cell_bits={cell_bits} outside [2, 8]")
+    qmax = 2 ** (cell_bits - 1) - 1
+    amax = jnp.maximum(jnp.max(jnp.abs(fp_am)),
+                       jnp.finfo(jnp.float32).tiny)
+    fracs = jnp.asarray((1.0, 0.7, 0.5, 0.35, 0.25, 0.15, 0.1, 0.05),
+                        jnp.float32)
+    scales = fracs * amax / qmax                                # (K,)
+    cand = jnp.clip(jnp.round(fp_am[None] / scales[:, None, None]),
+                    -qmax, qmax)                                # (K, C, D)
+    mse = jnp.mean((cand * scales[:, None, None] - fp_am[None]) ** 2,
+                   axis=(1, 2))
+    best = jnp.argmin(mse)
+    scale = scales[best]
+    codes = jnp.clip(jnp.round(fp_am / scale), -qmax, qmax)
+    return codes.astype(jnp.int32), scale.astype(jnp.float32)
+
+
+def dequantize_am(codes: Array, scale: Array) -> Array:
+    """Inverse of ``quantize_am``: the fake-quantized float view."""
+    return codes.astype(jnp.float32) * scale
+
+
 # ---------------------------------------------------------------------------
 # Associative search (§II-D, §III-D)
 # ---------------------------------------------------------------------------
@@ -130,6 +174,40 @@ def packed_predict(am_packed_t: Array, centroid_class: Array,
     q2 = queries.reshape(-1, queries.shape[-1])
     best, _ = kernel_ref.am_search_packed(
         kernel_ref.pack_rows(q2), am_packed_t, n_dims)
+    return centroid_class[best].reshape(queries.shape[:-1])
+
+
+# ---------------------------------------------------------------------------
+# Bit-sliced multi-bit residence (MIMHD-style multi-level cells)
+# ---------------------------------------------------------------------------
+
+def pack_am_planes(codes: Array, cell_bits: int) -> Array:
+    """(C, D) quantized codes -> (cell_bits, Dp, C) uint8 bit planes.
+
+    Codes from ``quantize_am`` are stored as offset codes
+    ``u = code + Qmax`` in [0, 2^b - 2], one packed bit plane per bit of
+    u, 8 cells/byte LSB-first along D, transposed to the kernels'
+    column-major centroid placement (see ``kernels.ref.pack_planes``).
+    """
+    if not 2 <= cell_bits <= 8:
+        raise ValueError(f"cell_bits={cell_bits} outside [2, 8]")
+    from repro.kernels import ref as kernel_ref
+    qmax = 2 ** (cell_bits - 1) - 1
+    return kernel_ref.pack_planes(codes + qmax, cell_bits)
+
+
+def multibit_am_bytes(dim: int, columns: int, cell_bits: int) -> int:
+    """Resident bytes of the (cell_bits, Dp, C) plane-packed AM."""
+    return cell_bits * (-(-dim // 8)) * columns
+
+
+def multibit_predict(am_planes_t: Array, centroid_class: Array,
+                     queries: Array, cell_bits: int) -> Array:
+    """Pure-jnp multi-bit prediction (oracle for the kernel path)."""
+    from repro.kernels import ref as kernel_ref
+    q2 = queries.reshape(-1, queries.shape[-1])
+    best, _ = kernel_ref.am_search_multibit(
+        q2, am_planes_t, cell_bits=cell_bits)
     return centroid_class[best].reshape(queries.shape[:-1])
 
 

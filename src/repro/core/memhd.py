@@ -161,6 +161,7 @@ class MemhdModel:
             ckpt=None, ckpt_every: int = 1,
             use_kernel: bool = False,
             noise_sim=None, noise_mode: str = "fixed",
+            cell_bits: Optional[int] = None,
             ) -> Tuple["MemhdModel", Dict]:
         """Full training pipeline: init + scan-compiled QAIL epochs.
 
@@ -190,6 +191,12 @@ class MemhdModel:
             instance ``deploy(target="imc", sim=noise_sim)`` will burn
             in (chip-in-the-loop); "fresh" redraws the perturbation per
             batch (robustness to the device distribution).
+          cell_bits: optional — multi-bit quantization-aware QAIL: the
+            training-time sims MVM sees the ``cell_bits``-bit quantized
+            view of the live float shadow, the representation
+            ``deploy(target="multibit", cell_bits=...)`` serves
+            (batched mode only; composes with a conductance-noise
+            ``noise_sim``; see ``qail.qail_epoch_scan``).
 
         Returns (model, history) where history holds per-epoch train miss
         rates and (optional) eval accuracies — consumed by the Fig.-5/6
@@ -198,6 +205,8 @@ class MemhdModel:
         epochs = self.am_cfg.epochs if epochs is None else epochs
         if noise_sim is not None and mode != "batched":
             raise ValueError("noise_sim needs the batched scan engine")
+        if cell_bits is not None and mode != "batched":
+            raise ValueError("cell_bits needs the batched scan engine")
 
         # Encode once; init and every epoch share these buffers.
         h = self.encode(feats)
@@ -267,7 +276,8 @@ class MemhdModel:
                 state, n_miss = qail.qail_epoch_scan(
                     state, self.am_cfg, hb, qb, yb, mask,
                     refresh_every=refresh_every, use_kernel=use_kernel,
-                    sim=noise_sim, noise_key=nkey, noise_mode=noise_mode)
+                    sim=noise_sim, noise_key=nkey, noise_mode=noise_mode,
+                    cell_bits=cell_bits)
                 miss = float(n_miss) / n  # the ONE host sync this epoch
             rec = {"epoch": ep, "train_miss": miss}
             if eval_q is not None:

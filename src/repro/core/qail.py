@@ -258,7 +258,7 @@ def prebatch(h: Array, q: Array, labels: Array, batch_size: int,
 
 @partial(jax.jit,
          static_argnames=("cfg", "refresh_every", "use_kernel", "sim",
-                          "noise_mode"),
+                          "noise_mode", "cell_bits"),
          donate_argnums=_DONATE)
 def qail_epoch_scan(state: AmState, cfg: MemhdConfig,
                     hb: Array, qb: Array, yb: Array, mask: Array,
@@ -266,6 +266,7 @@ def qail_epoch_scan(state: AmState, cfg: MemhdConfig,
                     use_kernel: bool = False,
                     sim=None, noise_key: Array = None,
                     noise_mode: str = "fixed",
+                    cell_bits: Optional[int] = None,
                     ) -> Tuple[AmState, Array]:
     """One QAIL epoch as a single compiled ``lax.scan`` over minibatches.
 
@@ -305,6 +306,17 @@ def qail_epoch_scan(state: AmState, cfg: MemhdConfig,
         the device level. "fresh" — a new draw per batch
         (fold_in(noise_key, batch)): trains for expected accuracy over
         the device distribution.
+      cell_bits: optional (static) — the quantization-aware hook for
+        the ``target="multibit"`` deployment. When set (2..8), each
+        batch's sims MVM sees the symmetric ``cell_bits``-bit
+        quantization of the LIVE float shadow (``am.quantize_am``
+        codes; argmax is scale-invariant) instead of the binary AM, so
+        Eq.-(4)/(5) targets are selected against the representation the
+        multibit backend will actually serve. The Eq.-(6) update still
+        lands on the clean float shadow, exactly as the 1-bit paper
+        loop (and the noise-aware hook) does. Composes with ``sim``
+        conductance noise (drawn per level step, on the code view);
+        stuck-at faults are 1-bit-cell semantics and are rejected.
 
     Returns:
       (state, n_miss) — n_miss is a DEVICE scalar; pulling it is the
@@ -333,6 +345,13 @@ def qail_epoch_scan(state: AmState, cfg: MemhdConfig,
         raise ValueError("sim injects device noise: pass noise_key")
     if noise_mode not in ("fixed", "fresh"):
         raise ValueError(f"bad noise_mode: {noise_mode!r}")
+    if cell_bits is not None:
+        if not 2 <= cell_bits <= 8:
+            raise ValueError(f"cell_bits={cell_bits} outside [2, 8]")
+        if noisy and (sim.fault_p0 > 0.0 or sim.fault_p1 > 0.0):
+            raise ValueError(
+                "stuck-at faults are 1-bit storage semantics; the "
+                "multibit QAT hook composes with conductance noise only")
 
     def _refresh(args):
         return refresh_am(args[0], args[1], cfg)
@@ -341,13 +360,26 @@ def qail_epoch_scan(state: AmState, cfg: MemhdConfig,
         fp, binary = carry
         b_idx, hx, qx, yx, mx = xs
         upd = hx if cfg.update_with == "encoded" else qx
+        if cell_bits is not None:
+            # Quantization-aware view: the live float shadow's
+            # cell_bits-bit codes (re-quantized per batch — the multibit
+            # analogue of refresh_every=1 for the binary AM).
+            codes, _ = am_lib.quantize_am(fp, cell_bits)
+            binary_mvm = codes.astype(jnp.float32)
+        else:
+            binary_mvm = binary
         if noisy:
             from repro.imcsim import device as device_lib
             bkey = (noise_key if noise_mode == "fixed"
                     else jax.random.fold_in(noise_key, b_idx))
-            binary_mvm = device_lib.perturb_binary(bkey, binary, sim)
-        else:
-            binary_mvm = binary
+            if cell_bits is not None:
+                # Code-domain conductance noise: sigma per level step
+                # (faults were rejected above).
+                binary_mvm = device_lib.conductance_noise(
+                    bkey, binary_mvm, sim.noise_sigma)
+            else:
+                binary_mvm = device_lib.perturb_binary(bkey, binary_mvm,
+                                                       sim)
         if use_kernel:
             from repro.kernels import ops
             delta, miss = ops.qail_update(

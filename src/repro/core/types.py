@@ -110,6 +110,15 @@ class MemhdConfig:
         """Binary AM footprint in bits (C x D), per Table I."""
         return self.columns * self.dim
 
+    def am_memory_bits_at(self, cell_bits: int = 1) -> int:
+        """Table-I AM bits generalized to multi-level cells: C x D cells
+        at ``cell_bits`` bits each (``cell_bits=1`` is the paper's
+        binary accounting; the ``target="multibit"`` deployment stores
+        2-8 bits per cell)."""
+        if cell_bits < 1:
+            raise ValueError(f"cell_bits={cell_bits} < 1")
+        return self.columns * self.dim * cell_bits
+
     @property
     def initial_clusters_per_class(self) -> int:
         """n = max(1, floor(C*R / k)) — §III-A1."""

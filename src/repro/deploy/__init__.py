@@ -10,10 +10,10 @@ arrays (PAPER.md §IV) — through ONE abstraction:
   plumbing (staged predict, padded-evaluator scoring, pytree
   registration via ``@pytree_artifact``) written exactly once.
 * ``registry`` — string-keyed backend factories:
-  ``model.deploy(target="packed" | "unpacked" | "imc", **opts)`` is a
-  thin dispatch through ``register_backend``/``get_backend``; new
-  backends (multi-bit packing, remote arrays) plug in without touching
-  the model.
+  ``model.deploy(target="packed" | "unpacked" | "imc" | "multibit" |
+  "hierarchical", **opts)`` is a thin dispatch through
+  ``register_backend``/``get_backend``; new backends (remote arrays,
+  product-quantized residuals) plug in without touching the model.
 * ``sharded.ShardedArtifact`` — multi-device data-parallel serving of
   any backend's query path under ``shard_map`` (AM replicated, batch
   sharded, ragged tails masked by the padded-evaluator contract).
@@ -30,6 +30,9 @@ from repro.deploy.digital import (  # noqa: F401
 )
 from repro.deploy.hierarchical import (  # noqa: F401
     HierarchicalMemhd, deploy_hierarchical,
+)
+from repro.deploy.multibit import (  # noqa: F401
+    MultibitDeployedMemhd, deploy_multibit,
 )
 from repro.deploy.padding import (  # noqa: F401
     pad_rows, pad_tiles, pad_to_multiple, pad_vec, round_up,

@@ -1,0 +1,164 @@
+"""Multi-bit serving artifact: the float AM at 2-8 bits per cell.
+
+``MemhdModel.deploy(target="multibit", cell_bits=4)`` freezes a
+symmetric ``cell_bits``-bit quantization of the trained *float* AM
+shadow (``repro.core.am.quantize_am``) into offset-code bit planes
+(``pack_am_planes``: 8 cells/byte along D, one plane per bit) and
+serves every query through the bit-sliced Pallas kernel
+(``kernels/am_search_multibit``): per-plane {0,1} MVM passes combined
+with shifted weights, per-tile ADC, digital accumulation, argmax.
+
+This is the MIMHD-style point between the 1-bit packed path and the
+32-bit unpacked path: C x D x cell_bits resident bits (16x / 8x below
+float32 at 2 / 4 bits) while reading out against the float shadow's
+decision surface instead of the binarized AM's. An optional
+``ImcSimConfig`` attaches array geometry, ADC transfer and per-tile
+readout drift — storage perturbations (conductance noise / stuck-at
+faults) are 1-bit-cell semantics and are rejected here; use
+``fit(cell_bits=...)`` (the quantization-aware QAIL hook) to train
+against the quantized readout instead.
+
+``MultibitDeployedMemhd`` implements the shared ``DeployedArtifact``
+protocol and registers as the ``"multibit"`` backend, so it composes
+with ``ShardedArtifact``, ``serve_memhd --target multibit``, and the
+online-serving ``refresh`` path (class growth re-quantizes and re-packs
+through the registry) exactly like every other backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar, Dict, Optional, Tuple
+
+import jax
+
+from repro.deploy.base import DeployedArtifact, pytree_artifact
+from repro.deploy.registry import register_backend
+
+Array = jax.Array
+
+
+@pytree_artifact
+@dataclasses.dataclass
+class MultibitDeployedMemhd(DeployedArtifact):
+    """Frozen MEMHD model resident as plane-packed multi-bit codes.
+
+    Immutable pytree: the packed bit planes, the quantizer scale, the
+    optional readout-drift offsets and the encoder parameters are the
+    leaves; configs (including ``cell_bits``) ride in aux, so jit
+    specializes per bit width and re-quantized swaps of the same
+    geometry keep their compiled executables.
+    """
+
+    enc_params: Dict[str, Array]
+    am_planes_t: Array             # (cell_bits, ceil(D/8), C) uint8
+    am_scale: Array                # () f32 quantizer scale
+    tile_offsets: Optional[Array]  # (gd, gc) readout drift, or None
+    centroid_class: Array          # (C,) int32
+    enc_cfg: Any
+    am_cfg: Any
+    sim: Optional[Any]             # ImcSimConfig or None
+    cell_bits: int
+
+    _leaf_fields: ClassVar[Tuple[str, ...]] = (
+        "enc_params", "am_planes_t", "am_scale", "tile_offsets",
+        "centroid_class")
+    _static_fields: ClassVar[Tuple[str, ...]] = (
+        "enc_cfg", "am_cfg", "sim", "cell_bits")
+
+    # -- inference -------------------------------------------------------------
+    def predict_query(self, q: Array) -> Array:
+        """(B, D) bipolar queries -> (B,) predicted class, via the
+        bit-sliced code-domain readout."""
+        from repro.kernels import ops
+        return ops.predict_multibit(q, self.am_planes_t,
+                                    self.centroid_class, sim=self.sim,
+                                    offsets=self.tile_offsets)
+
+    def search_query(self, q: Array) -> Tuple[Array, Array]:
+        """(best_idx, best_sim) with dequantized similarities."""
+        from repro.kernels import ops
+        return ops.am_search_multibit(q, self.am_planes_t, sim=self.sim,
+                                      scale=self.am_scale,
+                                      offsets=self.tile_offsets)
+
+    # -- live updates ----------------------------------------------------------
+    def _deploy_opts(self) -> dict:
+        # refresh() re-quantizes the updated float AM at the same bit
+        # width onto the SAME simulated readout (sim carries the seed).
+        return {"cell_bits": self.cell_bits, "sim": self.sim}
+
+    # -- reporting / accounting ------------------------------------------------
+    @property
+    def backend(self) -> str:
+        return "multibit"
+
+    @property
+    def serving_mode(self) -> str:
+        return f"bit-sliced-int{self.cell_bits}"
+
+    @property
+    def resident_bytes(self) -> int:
+        n = self.am_planes_t.size + self.am_scale.dtype.itemsize
+        if self.tile_offsets is not None:
+            n += self.tile_offsets.size * self.tile_offsets.dtype.itemsize
+        return int(n)
+
+    @property
+    def memory_bits(self) -> int:
+        """Table-I accounting at multi-level cells: EM + C*D*cell_bits."""
+        return (self.enc_cfg.memory_bits
+                + self.am_cfg.am_memory_bits_at(self.cell_bits))
+
+    @property
+    def cycles(self) -> int:
+        """Array passes per query — multi-level cells hold the whole
+        code, so the grid matches the 1-bit kernels' cycle count."""
+        from repro.kernels.am_search_multibit import imc_cycles_for
+        arr = self._cost_arr()
+        return imc_cycles_for(self.am_planes_t.shape, arr.rows, arr.cols)
+
+    def _cost_arr(self):
+        if self.sim is not None:
+            return self.sim.arr
+        from repro.core.imc import ImcArrayConfig
+        return ImcArrayConfig()
+
+
+@register_backend("multibit")
+def deploy_multibit(model, cell_bits: int = 4,
+                    sim: Optional[Any] = None) -> MultibitDeployedMemhd:
+    """Quantize ``model``'s float AM shadow to ``cell_bits``-bit planes."""
+    from repro.core import am as am_lib
+    from repro.core import imc as imc_lib
+    from repro.imcsim import device as device_lib
+
+    if not 2 <= cell_bits <= 8:
+        raise ValueError(
+            f"cell_bits={cell_bits} outside [2, 8]; the 1-bit point is "
+            "target='packed'")
+    offsets = None
+    if sim is not None:
+        if sim.noise_sigma > 0 or sim.fault_p0 > 0 or sim.fault_p1 > 0:
+            raise ValueError(
+                "conductance noise / stuck-at faults are 1-bit storage "
+                "perturbations; the multibit backend models the readout "
+                "path only (drift + ADC)")
+        imc_lib.assert_consistent_sim(
+            model.am_cfg.dim, model.am_cfg.columns, sim.arr)
+        if sim.drift_sigma > 0.0:
+            _, k_drift = jax.random.split(jax.random.key(sim.seed))
+            offsets = device_lib.tile_drift(
+                k_drift,
+                device_lib.tile_grid(model.am_cfg.dim,
+                                     model.am_cfg.columns, sim),
+                sim.drift_sigma)
+    codes, scale = am_lib.quantize_am(model.am_state["fp"], cell_bits)
+    return MultibitDeployedMemhd(
+        enc_params=model.enc_params,
+        am_planes_t=am_lib.pack_am_planes(codes, cell_bits),
+        am_scale=scale,
+        tile_offsets=offsets,
+        centroid_class=model.am_state["centroid_class"],
+        enc_cfg=model.enc_cfg, am_cfg=model.am_cfg, sim=sim,
+        cell_bits=cell_bits,
+    )

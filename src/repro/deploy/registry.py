@@ -26,7 +26,7 @@ _BACKENDS: Dict[str, Callable] = {}
 
 # Modules whose import registers the built-in backends.
 _BUILTIN_MODULES = ("repro.deploy.digital", "repro.deploy.hierarchical",
-                    "repro.imcsim.deploy")
+                    "repro.deploy.multibit", "repro.imcsim.deploy")
 
 
 def register_backend(name: str) -> Callable[[Callable], Callable]:

@@ -30,5 +30,5 @@ from repro.imcsim.evaluate import (  # noqa: F401
     sweep_noise_sigma,
 )
 from repro.imcsim.noise_aware import (  # noqa: F401
-    noise_aware_finetune, recovery_experiment,
+    multibit_finetune, noise_aware_finetune, recovery_experiment,
 )

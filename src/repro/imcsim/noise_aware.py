@@ -54,6 +54,28 @@ def noise_aware_finetune(model, key: Array, feats: Array, labels: Array,
                      **fit_kwargs)
 
 
+def multibit_finetune(model, key: Array, feats: Array, labels: Array,
+                      cell_bits: int, *, sim: Optional[ImcSimConfig] = None,
+                      epochs: int = 10, noise_mode: str = "fixed",
+                      **fit_kwargs) -> Tuple[object, Dict]:
+    """Quantization-aware fine-tune for the multi-bit deployment.
+
+    The same recipe as ``noise_aware_finetune``, one representation up:
+    ``model.fit(init_method="keep", cell_bits=cell_bits)`` evaluates
+    every training-time sims MVM against the ``cell_bits``-bit quantized
+    view of the live float shadow (``qail.qail_epoch_scan``'s per-batch
+    quantizer), so Eq.-(4)/(5) targets are selected against exactly the
+    representation ``deploy(target="multibit", cell_bits=cell_bits)``
+    serves. Pass a conductance-noise ``sim`` to additionally train
+    against per-level-step readout noise on the code view.
+
+    Returns (model, history) like ``fit``.
+    """
+    return model.fit(key, feats, labels, init_method="keep",
+                     epochs=epochs, cell_bits=cell_bits, noise_sim=sim,
+                     noise_mode=noise_mode, **fit_kwargs)
+
+
 def recovery_experiment(model, key: Array, feats: Array, labels: Array,
                         test_feats: Array, test_labels: Array,
                         sim: ImcSimConfig, *, epochs: int = 10,

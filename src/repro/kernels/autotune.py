@@ -55,6 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import am_search_multibit as _amb
 from repro.kernels import am_search_packed as _asp
 from repro.kernels import am_search_sparse as _ass
 from repro.kernels import am_shortlist as _shl
@@ -137,6 +138,27 @@ def _qu_vmem(bb, dims):
     return 2 * bb * d * 4 + d * c * 4 + c * d * 4 + 2 * bb * c * 4
 
 
+def _amb_inputs(rng, batch, dims):
+    # A quantized float AM packed into offset-code bit planes (inline
+    # quantizer — keeps this module kernels-only, no repro.core import).
+    d, c, bits = dims["D"], dims["C"], dims["bits"]
+    qmax = 2 ** (bits - 1) - 1
+    fp = rng.normal(size=(c, d)).astype(np.float32)
+    scale = np.abs(fp).max() / qmax
+    codes = np.clip(np.round(fp / scale), -qmax, qmax).astype(np.int32)
+    planes = ref.pack_planes(jnp.asarray(codes + qmax), bits)
+    q = jnp.asarray(rng.choice([-1.0, 1.0], size=(batch, d))
+                    .astype(np.float32))
+    return q, planes, bits
+
+
+def _amb_vmem(bb, dims):
+    # q block + the per-plane unpacked {0,1} slab + int32 bit broadcast
+    # + partial/accumulator blocks and winner scratch.
+    return (bb * TILE * 4 + TILE * TILE * 4 + TILE_P * 8 * TILE * 4
+            + 2 * bb * TILE * 4 + bb * 8)
+
+
 def _shl_inputs(rng, batch, dims):
     d, g, s = dims["D"], dims["G"], dims["S"]
     q = jnp.asarray(rng.choice([-1.0, 1.0], size=(batch, d))
@@ -181,6 +203,18 @@ def _ass_vmem(bb, dims):
 
 
 KERNELS: Dict[str, KernelSpec] = {
+    "am_search_multibit": KernelSpec(
+        name="am_search_multibit",
+        key_dims=("D", "C", "bits"),
+        default_block_b=_amb.DEFAULT_BLOCK_B,
+        candidates=_amb.TUNE_BLOCK_B,
+        make_inputs=_amb_inputs,
+        run=lambda bb, q, planes, bits: _amb.am_search_multibit(
+            q, planes, cell_bits=bits, block_b=bb),
+        run_ref=lambda q, planes, bits: ref.am_search_multibit(
+            q, planes, cell_bits=bits),
+        vmem_bytes=_amb_vmem,
+    ),
     "am_search_packed": KernelSpec(
         name="am_search_packed",
         key_dims=("D", "C"),
@@ -249,6 +283,8 @@ KERNELS: Dict[str, KernelSpec] = {
 
 # Paper geometries tuned by default (and shipped in the committed cache).
 DEFAULT_GEOMETRIES: Dict[str, Tuple[Dict[str, int], ...]] = {
+    "am_search_multibit": ({"D": 128, "C": 128, "bits": 2},
+                           {"D": 128, "C": 128, "bits": 4}),
     "am_search_packed": ({"D": 128, "C": 128}, {"D": 256, "C": 256}),
     # Hierarchical search: one serving-scale geometry (the 128x128
     # flagship model under the default G ~ 1.4*sqrt(C)) and one

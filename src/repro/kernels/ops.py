@@ -24,6 +24,12 @@ from repro.kernels.am_search import am_search as _am_search
 from repro.kernels.am_search import imc_cycles_for as search_cycles
 from repro.kernels.am_search_imc import am_search_imc as _am_search_imc
 from repro.kernels.am_search_imc import imc_cycles_for as imc_search_cycles
+from repro.kernels.am_search_multibit import (
+    am_search_multibit as _am_search_multibit,
+)
+from repro.kernels.am_search_multibit import (
+    imc_cycles_for as multibit_search_cycles,
+)
 from repro.kernels.am_search_packed import am_search_packed as _am_search_packed
 from repro.kernels.am_search_packed import imc_cycles_for as packed_search_cycles
 from repro.kernels.am_search_packed import pack_rows as _pack_rows
@@ -100,11 +106,14 @@ def tuned_block_b(kernel: str, block_b: int | None, **dims) -> int:
 
 __all__ = [
     "encode_mvm", "encode_pack", "am_search", "am_search_imc",
-    "am_search_packed", "am_shortlist", "am_search_sparse",
+    "am_search_multibit", "am_search_packed", "am_shortlist",
+    "am_search_sparse",
     "search_from_features", "predict_from_features",
     "pack_bits", "unpack_bits", "pack_rows", "qail_update",
     "predict_classes", "predict_packed", "predict_imc",
+    "predict_multibit",
     "search_cycles", "imc_search_cycles", "packed_search_cycles",
+    "multibit_search_cycles",
     "mvm_cycles", "encode_pack_cycles", "ref", "tuned_block_b",
     "dispatch_breakdown",
 ]
@@ -222,6 +231,53 @@ def am_search_imc(queries: Array, am: Array, *, sim, offsets: Array = None,
     return _am_search_imc(
         queries, am_t, offsets, tile_rows=sim.arr.rows,
         tile_cols=sim.arr.cols, adc_bits=sim.adc_bits, adc_clip=sim.clip)
+
+
+def am_search_multibit(queries: Array, am_planes_t: Array, *, sim=None,
+                       scale: Array | None = None,
+                       offsets: Array | None = None,
+                       use_kernel: bool = True,
+                       block_b: int | None = None) -> tuple[Array, Array]:
+    """Bit-sliced associative search over the multi-bit packed AM.
+
+    queries: (B, D) bipolar; am_planes_t: (cell_bits, Dp, C) uint8
+    offset-code bit planes (``repro.core.am.pack_am_planes``); sim: an
+    optional ``ImcSimConfig`` supplying array geometry + ADC transfer
+    (defaults: 128x128 array, 16-bit ADC, ``ref.multibit_adc_clip``
+    full scale); scale: optional quantizer scale — when given, the
+    returned similarities are dequantized (idx is scale-invariant);
+    offsets: optional per-tile code-domain readout drift grid.
+
+    Returns (best_idx, best_sim): (B,) int32, (B,) float32 — the idx
+    bit-exact with ``ref.am_search_multibit`` on the same operands.
+    """
+    cell_bits = int(am_planes_t.shape[0])
+    tile_rows = sim.arr.rows if sim is not None else 128
+    tile_cols = sim.arr.cols if sim is not None else 128
+    adc_bits = sim.adc_bits if sim is not None else 16
+    # Not sim.clip: that property defaults to the 1-bit bound (the row
+    # count); multi-bit partial sums need the Qmax-scaled full scale.
+    adc_clip = (sim.adc_clip
+                if sim is not None and sim.adc_clip is not None
+                else ref.multibit_adc_clip(cell_bits, tile_rows))
+    _count("am_search_multibit", _tier(use_kernel), B=queries.shape[0],
+           D=queries.shape[1], C=am_planes_t.shape[2], bits=cell_bits)
+    if not use_kernel:
+        idx, s = ref.am_search_multibit(
+            queries, am_planes_t, cell_bits=cell_bits,
+            tile_rows=tile_rows, tile_cols=tile_cols, adc_bits=adc_bits,
+            adc_clip=adc_clip, offsets=offsets)
+    else:
+        bb = tuned_block_b("am_search_multibit", block_b,
+                           D=queries.shape[1], C=am_planes_t.shape[2],
+                           bits=cell_bits)
+        idx, s = _am_search_multibit(
+            queries, am_planes_t, offsets, cell_bits=cell_bits,
+            tile_rows=tile_rows, tile_cols=tile_cols, adc_bits=adc_bits,
+            adc_clip=float(adc_clip), block_b=bb)
+    if scale is not None:
+        s = s * jnp.asarray(scale, jnp.float32)
+    return idx, s
 
 
 def am_search_packed(q_packed: Array, am_packed_t: Array, *, n_dims: int,
@@ -379,4 +435,16 @@ def predict_imc(queries: Array, am: Array, centroid_class: Array, *,
     tiled analog search + ADC + ownership lookup."""
     idx, _ = am_search_imc(queries, am, sim=sim, offsets=offsets,
                            use_kernel=use_kernel)
+    return centroid_class[idx]
+
+
+def predict_multibit(queries: Array, am_planes_t: Array,
+                     centroid_class: Array, *, sim=None,
+                     offsets: Array = None, use_kernel: bool = True,
+                     ) -> Array:
+    """§III-D prediction over the multi-bit residence: bit-sliced
+    code-domain search + ownership lookup (argmax is scale-invariant,
+    so the quantizer scale never enters)."""
+    idx, _ = am_search_multibit(queries, am_planes_t, sim=sim,
+                                offsets=offsets, use_kernel=use_kernel)
     return centroid_class[idx]

@@ -264,6 +264,103 @@ def am_search_imc(q: Array, am_t: Array, *, tile_rows: int, tile_cols: int,
     return best_idx, best_sim
 
 
+def multibit_adc_clip(cell_bits: int, tile_rows: int = 128) -> float:
+    """Default ADC full-scale range for bit-sliced multi-bit readout.
+
+    A (tile_rows)-row analog pass over ``cell_bits``-bit cells produces
+    code-domain partial sums bounded by ``Qmax * tile_rows`` with
+    ``Qmax = 2**(cell_bits-1) - 1``; the default clip is the next power
+    of two at or above that bound, so (as with the 1-bit kernel's
+    ``clip = rows`` default) the mid-tread step is a power of two and
+    integer partial sums reproduce exactly whenever ``step <= 1``.
+    """
+    qmax = 2 ** (cell_bits - 1) - 1
+    bound = max(qmax * tile_rows, 1)
+    return float(2 ** (bound - 1).bit_length())
+
+
+def pack_planes(u: Array, n_planes: int) -> Array:
+    """(C, D) unsigned integer codes -> (n_planes, ceil(D/8), C) uint8.
+
+    Bit plane p holds bit p of every code, packed 8 cells/byte LSB-first
+    along D (the ``pack_bits`` layout) and transposed to the kernels'
+    column-major centroid placement. D-tail bits pack as 0, i.e. code 0.
+    """
+    c, d = u.shape
+    pad = -d % 8
+    u = jnp.pad(u.astype(jnp.int32), ((0, 0), (0, pad)))
+    dp = u.shape[1] // 8
+    weights = 2 ** jnp.arange(8, dtype=jnp.int32)
+    planes = []
+    for p in range(n_planes):
+        bits = ((u >> p) & 1).reshape(c, dp, 8)
+        planes.append(jnp.sum(bits * weights, axis=-1).astype(jnp.uint8).T)
+    return jnp.stack(planes)
+
+
+def unpack_planes(planes: Array) -> Array:
+    """Inverse of ``pack_planes``: (P, Dp, C) uint8 -> (Dp*8, C) int32
+    offset codes (D-tail rows unpack to 0)."""
+    n_planes, dp, c = planes.shape
+    shifts = jnp.arange(8, dtype=jnp.int32)
+    bits = (planes.astype(jnp.int32)[:, :, None, :]
+            >> shifts[None, None, :, None]) & 1       # (P, Dp, 8, C)
+    weights = 2 ** jnp.arange(n_planes, dtype=jnp.int32)
+    return jnp.sum(bits.reshape(n_planes, dp * 8, c)
+                   * weights[:, None, None], axis=0)
+
+
+def am_search_multibit(q: Array, am_planes_t: Array, *, cell_bits: int,
+                       tile_rows: int = 128, tile_cols: int = 128,
+                       adc_bits: int = 16,
+                       adc_clip: float | None = None,
+                       offsets: Array | None = None,
+                       ) -> tuple[Array, Array]:
+    """Bit-sliced multi-bit associative-search oracle (code domain).
+
+    The resident AM is ``cell_bits``-bit symmetric codes stored as
+    offset codes ``u = code + Qmax`` in ``pack_planes`` bit planes;
+    the search unpacks them, recenters (``code = u - Qmax``), and runs
+    the same tiled analog-partial-sum + ADC + first-wins pipeline as
+    ``am_search_imc`` — in the integer code domain, so every similarity
+    is integer-valued and the kernel must match bit for bit. Callers
+    wanting dequantized similarities multiply by the AM scale.
+
+    q: (B, D) bipolar queries; am_planes_t: (cell_bits, ceil(D/8), C)
+    uint8 bit planes; offsets: optional (ceil(D/tile_rows),
+    ceil(C/tile_cols)) per-tile code-domain readout offsets.
+    Returns (best_idx, best_sim) like ``am_search``.
+    """
+    if adc_clip is None:
+        adc_clip = multibit_adc_clip(cell_bits, tile_rows)
+    qmax = 2 ** (cell_bits - 1) - 1
+    b, d = q.shape
+    n_planes, dp, c = am_planes_t.shape
+    assert n_planes == cell_bits, (am_planes_t.shape, cell_bits)
+    assert dp * 8 >= d > (dp - 1) * 8, (q.shape, am_planes_t.shape)
+    # Recentered codes; D-tail cells read -Qmax, but the matching query
+    # rows are zero-padded so they contribute nothing (the kernel's
+    # rowsum correction has the same property).
+    codes_t = (unpack_planes(am_planes_t) - qmax).astype(jnp.float32)
+    gd = -(-dp * 8 // tile_rows)
+    gc = -(-c // tile_cols)
+    qp = jnp.pad(q.astype(jnp.float32),
+                 ((0, 0), (0, gd * tile_rows - d)))
+    ap = jnp.pad(codes_t, ((0, gd * tile_rows - dp * 8),
+                           (0, gc * tile_cols - c)))
+    qr = qp.reshape(b, gd, tile_rows)
+    ar = ap.reshape(gd, tile_rows, gc, tile_cols)
+    part = jnp.einsum("bgr,grhc->bghc", qr, ar,
+                      preferred_element_type=jnp.float32)
+    if offsets is not None:
+        part = part + offsets[None, :, :, None]
+    part = adc_quantize(part, adc_bits, adc_clip)
+    sims = jnp.sum(part, axis=1).reshape(b, gc * tile_cols)[:, :c]
+    best_idx = jnp.argmax(sims, axis=-1).astype(jnp.int32)
+    best_sim = jnp.max(sims, axis=-1)
+    return best_idx, best_sim
+
+
 def qail_update_delta(q: Array, upd: Array, am_t: Array,
                       centroid_class: Array, labels: Array, mask: Array,
                       lr: float) -> tuple[Array, Array]:

@@ -3,7 +3,8 @@
 ``launch/serve.py`` serves LM decode; this driver serves the paper's
 actual deployment scenario — a stream of classification requests of raw
 feature rows against the resident AM of ANY registered deployment
-backend (``--target packed | unpacked | imc``). Requests of ragged
+backend (``--target packed | unpacked | imc | hierarchical |
+multibit``). Requests of ragged
 sizes are greedily packed into batches (a request never splits), each
 batch is zero-padded up to the next tile multiple so every launch hits
 the same compiled kernel shapes, and batches are served through a
@@ -323,8 +324,11 @@ def main():
                     help="max rows per request")
     ap.add_argument("--max-batch", type=int, default=256)
     ap.add_argument("--target", default=None,
-                    choices=["packed", "unpacked", "imc", "hierarchical"],
+                    choices=["packed", "unpacked", "imc", "hierarchical",
+                             "multibit"],
                     help="deployment backend (registry target)")
+    ap.add_argument("--cell-bits", type=int, default=4,
+                    help="multibit: bits per resident AM cell (2-8)")
     ap.add_argument("--mode", default="popcount",
                     choices=["popcount", "unpack"])
     ap.add_argument("--topk", type=int, default=0,
@@ -393,6 +397,8 @@ def main():
     elif target == "hierarchical":
         deployed = model.deploy(target=target, groups=args.groups,
                                 shortlist=args.shortlist)
+    elif target == "multibit":
+        deployed = model.deploy(target=target, cell_bits=args.cell_bits)
     else:
         deployed = model.deploy(target=target)
     if args.devices > 1:

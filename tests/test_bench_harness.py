@@ -282,6 +282,7 @@ SMALL_DIMS = {
     "am_search_packed": {"D": 128, "C": 32},
     "am_shortlist": {"D": 128, "G": 32, "S": 4},
     "am_search_sparse": {"D": 128, "T": 2, "K": 3},
+    "am_search_multibit": {"D": 128, "C": 32, "bits": 2},
     "encode_pack": {"f": 40, "D": 128},
     "qail_update": {"D": 128, "C": 32},
 }

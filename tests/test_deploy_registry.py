@@ -10,6 +10,10 @@ from repro.deploy import (DeployedArtifact, available_backends, deploy,
 from repro.deploy.base import pytree_artifact
 
 BACKENDS = sorted(available_backends())
+# The multibit backend reads out against the QUANTIZED float shadow,
+# not the binary AM — bit-exact parity with model.predict is the wrong
+# contract for it (its oracle parity lives in TestMultibitBackend).
+BINARY_PARITY_BACKENDS = [t for t in BACKENDS if t != "multibit"]
 
 
 @pytest.fixture(scope="module")
@@ -27,7 +31,8 @@ def trained(small_hdc_data):
 
 class TestRegistry:
     def test_builtin_backends_registered(self):
-        assert {"packed", "unpacked", "imc"} <= set(BACKENDS)
+        assert {"packed", "unpacked", "imc", "hierarchical",
+                "multibit"} <= set(BACKENDS)
 
     def test_unknown_target_error_names_backends(self, trained):
         _, m = trained
@@ -113,7 +118,7 @@ class TestBackendParity:
     contract of tests/test_imcsim.py.)
     """
 
-    @pytest.mark.parametrize("target", BACKENDS)
+    @pytest.mark.parametrize("target", BINARY_PARITY_BACKENDS)
     def test_predict_roundtrip(self, trained, target):
         ds, m = trained
         dep = m.deploy(target=target)
@@ -126,7 +131,7 @@ class TestBackendParity:
             np.asarray(dep.predict_features(ds.test_x[:48])),
             np.asarray(m.predict(ds.test_x[:48])))
 
-    @pytest.mark.parametrize("target", BACKENDS)
+    @pytest.mark.parametrize("target", BINARY_PARITY_BACKENDS)
     def test_score_matches_model(self, trained, target):
         ds, m = trained
         dep = m.deploy(target=target)
@@ -151,6 +156,84 @@ class TestBackendParity:
         assert dep.resident_am_bytes == dep.resident_bytes
         assert dep.am_memory_ratio > 0
         assert dep.imc_cost().total_cycles >= 1
+
+
+class TestMultibitBackend:
+    """Bit-sliced multi-bit artifact: oracle parity, Table-I accounting
+    at multi-level cells, refresh semantics, and sim validation."""
+
+    @pytest.mark.parametrize("bits", [2, 4])
+    def test_oracle_parity(self, trained, bits):
+        from repro.core import am as am_lib
+        ds, m = trained
+        dep = m.deploy(target="multibit", cell_bits=bits)
+        q = m.encode_query(ds.test_x[:32])
+        np.testing.assert_array_equal(
+            np.asarray(dep.predict_query(q)),
+            np.asarray(am_lib.multibit_predict(
+                dep.am_planes_t, dep.centroid_class, q, bits)))
+        # search_query sims are the code-domain sims dequantized.
+        from repro.kernels import ref
+        _, sims = dep.search_query(q)
+        _, code_sims = ref.am_search_multibit(q, dep.am_planes_t,
+                                              cell_bits=bits)
+        np.testing.assert_allclose(
+            np.asarray(sims),
+            np.asarray(code_sims) * float(dep.am_scale), rtol=1e-6)
+
+    @pytest.mark.parametrize("bits", [2, 4])
+    def test_memory_bits_table1(self, trained, bits):
+        _, m = trained
+        dep = m.deploy(target="multibit", cell_bits=bits)
+        d, c = m.am_cfg.dim, m.am_cfg.columns
+        assert m.am_cfg.am_memory_bits_at(bits) == c * d * bits
+        assert dep.memory_bits == m.enc_cfg.memory_bits + c * d * bits
+        # Plane residence: bits planes of ceil(D/8) bytes per column.
+        plane_bytes = bits * (-(-d // 8)) * c
+        assert dep.am_planes_t.size == plane_bytes
+        assert dep.resident_bytes >= plane_bytes
+        # vs the 1-bit point the packing is exactly `bits` planes.
+        assert m.am_cfg.am_memory_bits_at(bits) == \
+            bits * m.am_cfg.am_memory_bits
+
+    def test_refresh_keeps_signature_and_opts(self, trained):
+        _, m = trained
+        dep = m.deploy(target="multibit", cell_bits=2)
+        fresh = dep.refresh(m)
+        assert fresh is not dep
+        assert fresh.cell_bits == 2 and fresh.backend == "multibit"
+        assert fresh.swap_signature == dep.swap_signature
+        np.testing.assert_array_equal(np.asarray(fresh.am_planes_t),
+                                      np.asarray(dep.am_planes_t))
+
+    def test_rejects_bad_cell_bits(self, trained):
+        _, m = trained
+        with pytest.raises(ValueError, match="packed"):
+            m.deploy(target="multibit", cell_bits=1)
+        with pytest.raises(ValueError, match="outside"):
+            m.deploy(target="multibit", cell_bits=9)
+
+    def test_rejects_storage_perturbation_sims(self, trained):
+        from repro.core import ImcSimConfig
+        _, m = trained
+        for bad in (ImcSimConfig(noise_sigma=0.5),
+                    ImcSimConfig(fault_p0=0.01),
+                    ImcSimConfig(fault_p1=0.01)):
+            with pytest.raises(ValueError, match="1-bit storage"):
+                m.deploy(target="multibit", cell_bits=4, sim=bad)
+
+    def test_drift_sim_attaches_offsets(self, trained):
+        from repro.core import ImcSimConfig
+        _, m = trained
+        dep = m.deploy(target="multibit", cell_bits=4,
+                       sim=ImcSimConfig(drift_sigma=0.2, seed=5))
+        gd = -(-m.am_cfg.dim // dep.sim.arr.rows)
+        gc = -(-m.am_cfg.columns // dep.sim.arr.cols)
+        assert dep.tile_offsets.shape == (gd, gc)
+        # Same seed refreshes onto the same simulated readout.
+        np.testing.assert_array_equal(
+            np.asarray(dep.refresh(m).tile_offsets),
+            np.asarray(dep.tile_offsets))
 
 
 class TestPytreeStability:

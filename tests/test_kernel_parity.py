@@ -107,6 +107,33 @@ class TestKernelOracleParity:
         np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
         del f
 
+    @pytest.mark.parametrize("cell_bits,with_offsets", [
+        (2, False),            # ternary codes, pure code-domain readout
+        (4, True),             # int4 + per-tile readout drift
+    ])
+    def test_am_search_multibit(self, b, f, d, c, cell_bits,
+                                with_offsets):
+        rng = geom_rng(b, d, c, 4, cell_bits)
+        qmax = 2 ** (cell_bits - 1) - 1
+        q = bipolar(rng, (b, d))
+        codes = rng.integers(-qmax, qmax + 1, size=(c, d))
+        planes = ref.pack_planes(jnp.asarray(codes + qmax), cell_bits)
+        offsets = None
+        if with_offsets:
+            offsets = jnp.asarray(rng.normal(
+                0, 0.3, (-(-d // 128), -(-c // 128))).astype(np.float32))
+        gi, gs = ops.am_search_multibit(q, planes, offsets=offsets)
+        wi, ws = ref.am_search_multibit(q, planes, cell_bits=cell_bits,
+                                        offsets=offsets)
+        np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+        np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+        # Drift-free wide-ADC readout is the exact integer code MVM.
+        if not with_offsets:
+            exact = q @ jnp.asarray(codes, jnp.float32).T
+            np.testing.assert_array_equal(
+                np.asarray(gs), np.asarray(exact.max(axis=1)))
+        del f
+
     def test_qail_update(self, b, f, d, c):
         k = max(2, c // 3)
         rng = geom_rng(b, d, c, 3)

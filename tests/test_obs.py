@@ -2,7 +2,7 @@
 snapshot schema, Prometheus exposition), span nesting + Chrome-trace
 export, JAX runtime introspection (recompile counting under a
 deliberately shape-ragged jit), the dispatch-tier counters for all
-eight kernels, unified logging, and the JSONL event stream."""
+nine kernels, unified logging, and the JSONL event stream."""
 import json
 import logging
 import threading
@@ -293,13 +293,14 @@ class TestDispatchTiers:
         b, a = before.get(kernel, {}), after.get(kernel, {})
         return {t: a.get(t, 0) - b.get(t, 0) for t in a}
 
-    def test_all_eight_kernels_counted(self):
+    def test_all_nine_kernels_counted(self):
         """binary_mvm, encode_pack, am_search, am_search_imc,
-        am_search_packed, am_shortlist, am_search_sparse, qail_update:
-        one dispatch each, on the tier the backend serves them with."""
+        am_search_multibit, am_search_packed, am_shortlist,
+        am_search_sparse, qail_update: one dispatch each, on the tier
+        the backend serves them with."""
         from repro.core.types import ImcArrayConfig, ImcSimConfig
         from repro.deploy import hierarchical as hier
-        from repro.kernels import ops
+        from repro.kernels import ops, ref
         rng = np.random.default_rng(42)
         b, f, d, c = 2, 16, 128, 6
         feats = jnp.asarray(rng.random((b, f), dtype=np.float32))
@@ -307,6 +308,8 @@ class TestDispatchTiers:
         q, am = _bipolar(rng, (b, d)), _bipolar(rng, (c, d))
         qp = ops.pack_rows(q)
         apt = ops.pack_rows(am).T
+        codes = rng.integers(-1, 2, size=(c, d))
+        planes = ref.pack_planes(jnp.asarray(codes + 1), 2)
 
         before = self._counts()
         ops.encode_mvm(feats, proj)
@@ -314,6 +317,7 @@ class TestDispatchTiers:
         ops.am_search(q, am)
         ops.am_search_imc(q, am, sim=ImcSimConfig(
             arr=ImcArrayConfig(rows=128, cols=128)))
+        ops.am_search_multibit(q, planes)
         ops.am_search_packed(qp, apt, n_dims=d)
         ops.am_shortlist(qp, apt, n_dims=d, s=2)
         g = 2
@@ -336,6 +340,7 @@ class TestDispatchTiers:
         expect = {
             "binary_mvm": "pallas", "encode_pack": "pallas",
             "am_search": "pallas", "am_search_imc": "pallas",
+            "am_search_multibit": "pallas",
             "am_search_packed": "pallas",
             "am_shortlist": auto_tier, "am_search_sparse": auto_tier,
             "qail_update": "pallas",

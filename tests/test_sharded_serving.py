@@ -42,7 +42,8 @@ class TestShardedWrapper:
     """In-process checks on a 1-device mesh (the real multi-device
     parity runs in the subprocess tests below)."""
 
-    @pytest.mark.parametrize("target", ["packed", "unpacked", "imc"])
+    @pytest.mark.parametrize("target", ["packed", "unpacked", "imc",
+                                        "multibit"])
     def test_parity_every_backend(self, model, feats, target):
         dep = model.deploy(target=target)
         sh = ShardedArtifact(dep, devices=1)
@@ -147,8 +148,10 @@ m = dataclasses.replace(
     m, am_state=am_lib.make_am_state(fp, owners, amc.threshold))
 x = rng.normal(size=(83, 24)).astype(np.float32)  # 83 % 8 != 0
 
-for target in ("packed", "imc"):
-    dep = m.deploy(target=target)
+for target, opts in (("packed", {}), ("imc", {}),
+                     ("multibit", {"cell_bits": 2}),
+                     ("multibit", {"cell_bits": 4})):
+    dep = m.deploy(target=target, **opts)
     want = np.asarray(dep.predict(x))
     sh = ShardedArtifact(dep, devices=8)
     assert sh.n_devices == 8
